@@ -1,0 +1,46 @@
+"""Fault-tolerance demo: crash mid-run, restart, resume exactly.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+
+Phase 1 trains with an injected failure at step 25 (exit code 17).
+Phase 2 relaunches the identical command: it restores the last committed
+checkpoint, skips the data pipeline ahead, and finishes. The final
+losses match an uninterrupted gold run (see tests/test_integration.py
+for the assertion version).
+"""
+import shutil
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run(extra, check=True):
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "olmo-1b", "--smoke", "--steps", "40",
+           "--batch", "4", "--seq", "32", "--ckpt-every", "10",
+           "--ckpt-dir", CKPT] + extra
+    print(f"$ {' '.join(cmd[2:])}")
+    p = subprocess.run(cmd, env={"PYTHONPATH": str(REPO / "src")},
+                       capture_output=True, text=True)
+    print(p.stdout)
+    if check and p.returncode != 0:
+        print(p.stderr)
+        raise SystemExit(p.returncode)
+    return p
+
+
+if __name__ == "__main__":
+    CKPT = tempfile.mkdtemp(prefix="elastic_")
+    try:
+        print("=== phase 1: train with injected failure at step 25 ===")
+        p = run(["--simulate-failure", "25"], check=False)
+        assert p.returncode == 17, "expected the injected failure"
+        print("=== phase 2: relaunch — restores and finishes ===")
+        p = run([])
+        assert "restored step" in p.stdout
+        print("resume-after-failure ✓")
+    finally:
+        shutil.rmtree(CKPT, ignore_errors=True)

@@ -1,0 +1,78 @@
+"""Quickstart — the paper's own scenario: a small CNN whose convolution
+layers are implemented by resource-adaptive IPs.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+For three deployment budgets (ample / MXU-starved / 8-bit parallel) the
+selector assigns a conv IP per layer, the network runs int8 inference
+through the selected Pallas kernels (interpret mode on CPU), and all
+three deployments are verified to produce identical logits — resource
+adaptation changes the *implementation*, never the *result* (the
+paper's central promise).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resources import ResourceBudget
+from repro.core.selector import select_conv_ip
+from repro.kernels.conv2d.ops import conv2d
+
+LAYERS = [  # (cin, cout, kernel) — an int8 feature stack big enough
+    (16, 32, 3),   # that the MXU IP wins under an ample budget while
+    (32, 64, 3),   # the VPU IP takes over when the MXU is spoken for
+    (64, 64, 3),
+]
+
+BUDGETS = {
+    "ample": ResourceBudget(),
+    "mxu_starved": ResourceBudget(mxu_available=False),
+    "vmem_tight": ResourceBudget(vmem_bytes=1 * 2**20),
+}
+
+
+def relu_pool(x):
+    x = jnp.maximum(x, 0)
+    n, h, w, c = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+    return jnp.clip(x // 8, -128, 127).astype(jnp.int8)  # requantize
+
+
+def main():
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(-128, 128, (2, 48, 48, 16),
+                                   dtype=np.int8))
+    weights = [jnp.asarray(rng.integers(-16, 16, (k, k, cin, cout),
+                                        dtype=np.int8))
+               for cin, cout, k in LAYERS]
+
+    results = {}
+    for bname, budget in BUDGETS.items():
+        print(f"\n=== budget: {bname} ===")
+        x = img
+        for li, ((cin, cout, k), w) in enumerate(zip(LAYERS, weights)):
+            ip = select_conv_ip(x.shape, w.shape, dual=False,
+                                dtype=jnp.int8, budget=budget)
+            fp = ip.footprint(*x.shape, k, k, cout, itemsize=1)
+            print(f"  layer {li}: {x.shape} -> {ip.name:<22s} "
+                  f"vmem={fp.vmem_bytes/1024:8.1f}KiB mxu={fp.mxu_passes:<4d} "
+                  f"vpu={fp.vpu_ops:.2e}")
+            y = conv2d(x, w, ip=ip.name)
+            x = relu_pool(y)
+        results[bname] = np.asarray(x)
+        print(f"  output: {x.shape}, sum={int(np.asarray(x).sum())}")
+
+    base = results["ample"]
+    for bname, out in results.items():
+        assert np.array_equal(out, base), bname
+    print("\nall budgets produced IDENTICAL outputs — adaptation changed "
+          "the implementation, not the math. ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: continuous batching over 4 slots.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch llama3.2-1b]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import serve  # noqa: E402
+
+if __name__ == "__main__":
+    arch = "llama3.2-1b"
+    if "--arch" in sys.argv:
+        arch = sys.argv[sys.argv.index("--arch") + 1]
+    serve(["--arch", arch, "--smoke", "--requests", "10", "--slots", "4",
+           "--prompt-len", "12", "--max-new", "12", "--max-len", "48"])

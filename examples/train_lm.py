@@ -1,0 +1,30 @@
+"""End-to-end training driver example.
+
+Default (CI-friendly, CPU): a reduced olmo-family model for 60 steps
+with checkpointing — loss visibly drops.
+
+The ~100M-parameter run the deliverable describes:
+    PYTHONPATH=src python examples/train_lm.py --full
+which drives the same launcher with d_model=768, 12 layers
+(~103M params incl embeddings) for 300 steps. On CPU this takes hours;
+on a real TPU slice it is minutes — the launcher is identical.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import train  # noqa: E402
+
+if __name__ == "__main__":
+    if "--full" in sys.argv:
+        train(["--arch", "olmo-1b", "--smoke",
+               "--d-model", "768", "--n-layers", "12",
+               "--steps", "300", "--batch", "16", "--seq", "512",
+               "--lr", "3e-4", "--ckpt-dir", "/tmp/repro_100m",
+               "--ckpt-every", "50"])
+    else:
+        train(["--arch", "olmo-1b", "--smoke",
+               "--steps", "60", "--batch", "8", "--seq", "64",
+               "--lr", "5e-3", "--ckpt-dir", "/tmp/repro_quick",
+               "--ckpt-every", "20"])

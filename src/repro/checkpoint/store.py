@@ -1,0 +1,151 @@
+"""Sharded checkpointing: atomic-commit manifests, async save, and
+reshard-on-restore (the elastic-scaling primitive).
+
+Layout:
+  <dir>/step_000123/
+    manifest.json    tree structure, dtypes/shapes, mesh, step, data state
+    arr_00000.npy …  one file per leaf (per-host shard in multihost; the
+                     whole leaf on this single-host runtime)
+  <dir>/LATEST       committed step pointer — written LAST (atomic rename),
+                     so a crash mid-save never corrupts the restore point.
+
+Restore takes a *target* mesh/sharding that may differ from the saved
+one: leaves are loaded on host and device_put with the new sharding —
+i.e. checkpoint-reshard-restart is the elastic-scaling path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous sharded save with atomic commit."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    step_name = f"step_{step:09d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=f".{step_name}."))
+    try:
+        leaves, treedef = _flatten(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "leaves": [],
+            "extra": extra or {},
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            np.save(tmp / f"arr_{i:05d}.npy", arr)
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = ckpt_dir / step_name
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic on same fs
+        latest_tmp = ckpt_dir / ".LATEST.tmp"
+        latest_tmp.write_text(step_name)
+        os.replace(latest_tmp, ckpt_dir / "LATEST")  # commit point
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    _gc(ckpt_dir, keep)
+    return str(ckpt_dir / step_name)
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; at most one in flight
+    (a newer snapshot supersedes a queued older one)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: Optional[tuple] = None
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: list = []
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        # Pull to host *now* (the device buffers may be donated next step).
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        with self._lock:
+            self._pending = (step, host_tree, extra)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain,
+                                                daemon=True)
+                self._thread.start()
+
+    def _drain(self):
+        while True:
+            with self._lock:
+                item, self._pending = self._pending, None
+            if item is None:
+                return
+            step, tree, extra = item
+            save(self.ckpt_dir, step, tree, extra=extra, keep=self.keep)
+            self.saved_steps.append(step)
+
+    def wait(self):
+        t = self._thread
+        if t is not None:
+            t.join()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    latest = Path(ckpt_dir) / "LATEST"
+    if not latest.exists():
+        return None
+    return int(latest.read_text().strip().split("_")[-1])
+
+
+def restore(ckpt_dir: str, target_tree, *, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target_tree``; optionally reshard.
+
+    ``shardings``: a matching pytree of jax.sharding.Sharding — leaves
+    are device_put with the *target* sharding, which may correspond to a
+    different mesh than the one the checkpoint was written under
+    (elastic restart).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(target_tree)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, target {len(leaves)}"
+    new_leaves = []
+    shard_leaves = (jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))[0]
+        if shardings is not None else [None] * len(leaves))
+    for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(d / f"arr_{i:05d}.npy")
+        assert list(arr.shape) == list(ref.shape), (arr.shape, ref.shape)
+        arr = arr.astype(ref.dtype)
+        new_leaves.append(jax.device_put(arr, shd) if shd is not None
+                          else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["extra"]

@@ -1,0 +1,128 @@
+"""Block-shape autotuning for the kernel IPs.
+
+The paper sizes each IP to its resource budget by hand; this module
+automates the remaining free parameters (BlockSpec tile shapes) the way
+the dry-run does everything else: score candidate tilings against the
+footprint cost model (VMEM fit -> feasibility; est_cycles -> rank),
+optionally refined by wall-clock measurement in interpret mode.
+
+    best = autotune_matmul(m, k, n, budget=ResourceBudget())
+    y = mm_mxu(a, b, **best.params)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.resources import (LANE, MXU_DIM, Footprint, ResourceBudget,
+                                  SUBLANE)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    params: Dict[str, int]
+    footprint: Footprint
+    est_cycles: float
+    measured_us: Optional[float] = None
+
+
+def _aligned(lo: int, hi: int, align: int) -> List[int]:
+    out = []
+    v = align
+    while v <= hi:
+        if v >= lo:
+            out.append(v)
+        v *= 2
+    return out or [align]
+
+
+def sweep(footprint_fn: Callable[..., Footprint], grid: Dict[str, Sequence[int]],
+          budget: ResourceBudget, *fp_args, top: int = 3,
+          measure: Optional[Callable[..., float]] = None,
+          **fp_kwargs) -> List[TuneResult]:
+    """Generic sweep: rank feasible tilings by est_cycles (then VMEM)."""
+    names = list(grid)
+    results: List[TuneResult] = []
+    for combo in itertools.product(*(grid[n] for n in names)):
+        params = dict(zip(names, combo))
+        fp = footprint_fn(*fp_args, **fp_kwargs, **params)
+        if not fp.fits(budget):
+            continue
+        results.append(TuneResult(params, fp, fp.est_cycles))
+    results.sort(key=lambda r: (r.est_cycles, r.footprint.vmem_bytes))
+    results = results[:top]
+    if measure is not None:
+        measured = []
+        for r in results:
+            us = measure(**r.params)
+            measured.append(dataclasses.replace(r, measured_us=us))
+        measured.sort(key=lambda r: r.measured_us)
+        return measured
+    return results
+
+
+def autotune_matmul(m: int, k: int, n: int, *, itemsize: int = 2,
+                    budget: Optional[ResourceBudget] = None,
+                    measure: bool = False) -> TuneResult:
+    """Tile sweep for mm_mxu; MXU-aligned candidates only."""
+    from repro.kernels.matmul.mxu import footprint_mxu, mm_mxu
+    budget = budget or ResourceBudget()
+    grid = {"bm": _aligned(MXU_DIM, min(m, 1024), MXU_DIM),
+            "bn": _aligned(MXU_DIM, min(n, 1024), MXU_DIM),
+            "bk": _aligned(MXU_DIM, min(k, 2048), MXU_DIM)}
+    meas = None
+    if measure:
+        import jax
+        import numpy as np
+        import jax.numpy as jnp
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+
+        def run(**params):
+            fn = lambda: mm_mxu(a, b, **params)
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return (time.perf_counter() - t0) * 1e6
+
+        meas = run
+    res = sweep(footprint_mxu, grid, budget, m, k, n, itemsize=itemsize,
+                measure=meas)
+    if not res:
+        raise ValueError(f"no feasible matmul tiling for ({m},{k},{n}) "
+                         f"under {budget}")
+    return res[0]
+
+
+def autotune_flash(b: int, hq: int, hkv: int, sq: int, skv: int, d: int, *,
+                   itemsize: int = 2,
+                   budget: Optional[ResourceBudget] = None) -> TuneResult:
+    """Chunk sweep for flash attention (bq, bk)."""
+    from repro.kernels.attention.flash import footprint
+    budget = budget or ResourceBudget()
+    grid = {"bq": _aligned(SUBLANE * 16, min(sq, 2048), 128),
+            "bk": _aligned(LANE, min(skv, 4096), 128)}
+    res = sweep(footprint, grid, budget, b, hq, hkv, sq, skv, d,
+                itemsize=itemsize)
+    if not res:
+        raise ValueError("no feasible flash tiling")
+    return res[0]
+
+
+def autotune_conv(n: int, h: int, w: int, cin: int, kh: int, kw: int,
+                  cout: int, *, ip: str = "ip2_mxu", itemsize: int = 1,
+                  budget: Optional[ResourceBudget] = None) -> TuneResult:
+    """Cout-block sweep for the conv IPs."""
+    import importlib
+    mod = importlib.import_module(
+        f"repro.kernels.conv2d.{ip if ip.startswith('ip') else 'ip2_mxu'}")
+    budget = budget or ResourceBudget()
+    grid = {"block_cout": _aligned(LANE, max(cout, LANE), LANE)}
+    res = sweep(mod.footprint, grid, budget, n, h, w, cin, kh, kw, cout,
+                itemsize=itemsize)
+    if not res:
+        raise ValueError("no feasible conv tiling")
+    return res[0]

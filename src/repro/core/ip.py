@@ -1,0 +1,74 @@
+"""KernelIP — one entry of the adaptive IP library.
+
+The paper ships four VHDL IPs, each a (behaviour, resource-contract)
+pair.  Here an IP is a callable plus a ``footprint(shape)`` function that
+prices it against the TPU resource vector, plus the static capability
+bits from paper Table I (operand-width ceiling, outputs per pass,
+whether it needs the MXU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.resources import Footprint, ResourceBudget
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelIP:
+    name: str                 # e.g. "conv2d.ip3_packed"
+    family: str               # "conv2d" | "matmul" | "attention"
+    impl: Callable[..., Any]  # the jit-able implementation
+    footprint_fn: Callable[..., Footprint]
+    description: str = ""
+    # Static capability bits (paper Table I columns):
+    uses_mxu: bool = True
+    max_operand_bits: int = 32
+    outputs_per_pass: int = 1
+    supports_dtypes: Tuple[str, ...] = ("int8", "bfloat16", "float32")
+    tags: Tuple[str, ...] = ()
+
+    def footprint(self, *shape_args, **shape_kwargs) -> Footprint:
+        fp = self.footprint_fn(*shape_args, **shape_kwargs)
+        # The static ceiling is authoritative; a footprint_fn may tighten
+        # it per-shape but never widen it.
+        return dataclasses.replace(
+            fp, max_operand_bits=min(fp.max_operand_bits, self.max_operand_bits),
+            outputs_per_pass=self.outputs_per_pass)
+
+    def feasible(self, budget: ResourceBudget, *shape_args, **shape_kwargs) -> bool:
+        return self.footprint(*shape_args, **shape_kwargs).fits(budget)
+
+    def __call__(self, *args, **kwargs):
+        return self.impl(*args, **kwargs)
+
+
+@dataclasses.dataclass
+class IPFamily:
+    """All IPs implementing one op contract (same ref.py oracle)."""
+
+    name: str
+    members: Dict[str, KernelIP] = dataclasses.field(default_factory=dict)
+    reference: Optional[Callable[..., Any]] = None
+
+    def register(self, ip: KernelIP) -> KernelIP:
+        if ip.name in self.members:
+            raise ValueError(f"duplicate IP {ip.name!r} in family {self.name!r}")
+        self.members[ip.name] = ip
+        return ip
+
+    def __iter__(self):
+        return iter(self.members.values())
+
+    def __getitem__(self, name: str) -> KernelIP:
+        if name in self.members:
+            return self.members[name]
+        # allow short names: "ip3_packed" for "conv2d.ip3_packed"
+        qual = f"{self.name}.{name}"
+        if qual in self.members:
+            return self.members[qual]
+        raise KeyError(f"no IP {name!r} in family {self.name!r}; "
+                       f"have {sorted(self.members)}")
+
+    def names(self) -> Sequence[str]:
+        return sorted(self.members)

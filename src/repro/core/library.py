@@ -1,0 +1,122 @@
+"""The adaptive IP library — paper Table I, machine-readable.
+
+Three families (conv2d is the paper's literal object; matmul and
+attention are its generalization to the assigned LM architectures).
+Every member carries the Table I capability bits and a footprint
+function pricing it against the TPU resource vector.
+"""
+from __future__ import annotations
+
+from repro.core.ip import IPFamily, KernelIP
+from repro.kernels.conv2d import ip1_vpu, ip2_mxu, ip3_packed, ip4_dual
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.matmul import dual as mm_dual
+from repro.kernels.matmul import mxu as mm_mxu_mod
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.attention import decode as attn_decode_mod
+from repro.kernels.attention import flash as attn_flash_mod
+from repro.kernels.attention.ref import attention_ref
+
+# --------------------------------------------------------------------------
+# conv2d family — the paper's four IPs.
+# --------------------------------------------------------------------------
+CONV2D = IPFamily("conv2d", reference=conv2d_ref)
+CONV2D.register(KernelIP(
+    name="conv2d.ip1_vpu", family="conv2d", impl=ip1_vpu.conv2d_ip1,
+    footprint_fn=ip1_vpu.footprint, uses_mxu=False, max_operand_bits=32,
+    outputs_per_pass=1, tags=("paper:Conv1", "logic-only"),
+    description="No DSP/MXU; one convolution per pass; high vector logic."))
+CONV2D.register(KernelIP(
+    name="conv2d.ip2_mxu", family="conv2d", impl=ip2_mxu.conv2d_ip2,
+    footprint_fn=ip2_mxu.footprint, uses_mxu=True, max_operand_bits=32,
+    outputs_per_pass=1, tags=("paper:Conv2",),
+    description="One MXU pass per tile; minimal vector logic."))
+CONV2D.register(KernelIP(
+    name="conv2d.ip3_packed", family="conv2d", impl=ip3_packed.conv2d_ip3,
+    footprint_fn=ip3_packed.footprint, uses_mxu=False, max_operand_bits=8,
+    outputs_per_pass=2, supports_dtypes=("int8",),
+    tags=("paper:Conv3", "packed", "dual-stream"),
+    description="Operand packing: two 8-bit convolutions per multiplier."))
+CONV2D.register(KernelIP(
+    name="conv2d.ip4_dual", family="conv2d", impl=ip4_dual.conv2d_ip4,
+    footprint_fn=ip4_dual.footprint, uses_mxu=True, max_operand_bits=32,
+    outputs_per_pass=2, tags=("paper:Conv4", "dual-stream"),
+    description="Two parallel convolutions via dual MXU passes; full precision."))
+
+# --------------------------------------------------------------------------
+# matmul family — the LM-hot-path generalization.
+# --------------------------------------------------------------------------
+MATMUL = IPFamily("matmul", reference=matmul_ref)
+MATMUL.register(KernelIP(
+    name="matmul.mm_vpu", family="matmul", impl=mm_mxu_mod.mm_vpu,
+    footprint_fn=mm_mxu_mod.footprint_vpu, uses_mxu=False,
+    tags=("analogue:Conv1",),
+    description="Dot-free broadcast-multiply matmul; VPU only."))
+MATMUL.register(KernelIP(
+    name="matmul.mm_mxu", family="matmul", impl=mm_mxu_mod.mm_mxu,
+    footprint_fn=mm_mxu_mod.footprint_mxu, uses_mxu=True,
+    tags=("analogue:Conv2",),
+    description="Tiled MXU matmul, f32/int32 VMEM accumulator."))
+MATMUL.register(KernelIP(
+    name="matmul.mm_dual_shared", family="matmul", impl=mm_dual.mm_dual_shared,
+    footprint_fn=lambda m, k, n, **kw: mm_dual.footprint_dual(
+        m, k, n, int8=True, **kw),
+    uses_mxu=True, max_operand_bits=8, outputs_per_pass=2,
+    supports_dtypes=("int8",), tags=("analogue:Conv3", "dual-stream"),
+    description="Two int8 streams, one weight fetch, 2x int8 MXU rate."))
+MATMUL.register(KernelIP(
+    name="matmul.mm_dual_full", family="matmul", impl=mm_dual.mm_dual_full,
+    footprint_fn=lambda m, k, n, itemsize=2, **kw: mm_dual.footprint_dual(
+        m, k, n, int8=False, itemsize=itemsize, **kw),
+    uses_mxu=True, outputs_per_pass=2, tags=("analogue:Conv4", "dual-stream"),
+    description="Two full-precision streams sharing one weight fetch."))
+
+# --------------------------------------------------------------------------
+# attention family.
+# --------------------------------------------------------------------------
+ATTENTION = IPFamily("attention", reference=attention_ref)
+ATTENTION.register(KernelIP(
+    name="attention.attn_naive", family="attention", impl=attention_ref,
+    footprint_fn=lambda b, hq, hkv, sq, skv, d, **kw: attn_flash_mod.footprint(
+        b, hq, hkv, sq, skv, d, bq=sq, bk=skv, **kw),
+    uses_mxu=True, tags=("reference",),
+    description="Materialized-scores attention; VMEM O(S^2) — small S only."))
+ATTENTION.register(KernelIP(
+    name="attention.attn_flash", family="attention",
+    impl=attn_flash_mod.flash_attention,
+    footprint_fn=attn_flash_mod.footprint, uses_mxu=True,
+    tags=("train", "prefill"),
+    description="Tiled online-softmax; VMEM O(block), HBM O(S*D)."))
+ATTENTION.register(KernelIP(
+    name="attention.attn_decode", family="attention",
+    impl=attn_decode_mod.flash_decode,
+    footprint_fn=attn_decode_mod.footprint, uses_mxu=True,
+    tags=("decode",),
+    description="Single-token flash-decode over KV blocks; HBM-bound."))
+
+# --------------------------------------------------------------------------
+# ssm_scan family — the attention-free recurrence (jamba/rwkv end of the
+# spectrum; Conv1-style logic-only contract: zero MXU passes).
+# --------------------------------------------------------------------------
+from repro.kernels.mamba_scan import scan as mamba_scan_mod  # noqa: E402
+from repro.kernels.mamba_scan.ref import selective_scan_ref  # noqa: E402
+
+SSM_SCAN = IPFamily("ssm_scan", reference=selective_scan_ref)
+SSM_SCAN.register(KernelIP(
+    name="ssm_scan.selective_vmem", family="ssm_scan",
+    impl=mamba_scan_mod.selective_scan,
+    footprint_fn=mamba_scan_mod.footprint, uses_mxu=False,
+    tags=("analogue:Conv1", "ssm"),
+    description="Selective scan with VMEM-resident state: HBM traffic "
+                "O(T·(Di+Ds)) vs the scan twin's O(T·Di·Ds)."))
+
+FAMILIES = {f.name: f for f in (CONV2D, MATMUL, ATTENTION, SSM_SCAN)}
+
+
+def get_family(name: str) -> IPFamily:
+    return FAMILIES[name]
+
+
+def get_ip(qualified: str) -> KernelIP:
+    family, _, short = qualified.partition(".")
+    return FAMILIES[family][short or qualified]

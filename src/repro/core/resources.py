@@ -1,0 +1,113 @@
+"""TPU resource model — the target-hardware vector the selector adapts to.
+
+The paper adapts convolution IPs to the FPGA resource vector
+(DSP slices, LUT/CLB fabric, BRAM).  On TPU v5e the analogous vector is
+(MXU passes, VPU ops, VMEM bytes, HBM bytes/bandwidth, ICI bandwidth).
+``ResourceBudget`` is the machine-readable "available resources" a
+deployment hands to the selector; ``Footprint`` is what one kernel IP
+costs against that budget for a concrete shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per chip).  These are the numbers the roofline
+# analysis and the selector cost model share; keep them in one place.
+# ---------------------------------------------------------------------------
+PEAK_BF16_FLOPS = 197e12          # bf16 MXU peak, FLOP/s
+PEAK_INT8_OPS = 394e12            # int8 MXU peak, OP/s (2x bf16)
+HBM_BYTES = 16 * 1024**3          # 16 GiB HBM
+HBM_BW = 819e9                    # bytes/s
+VMEM_BYTES = 128 * 1024 * 1024    # ~128 MiB vector memory
+ICI_BW_PER_LINK = 50e9            # bytes/s per ICI link (given)
+ICI_LINKS = 4                     # v5e 2D torus: 4 links/chip
+VPU_LANES = 8 * 128               # (8, 128) vector registers
+VPU_OPS_PER_CYCLE = 4 * VPU_LANES # 4 ALUs per lane pair (approx)
+CLOCK_HZ = 940e6                  # v5e core clock
+MXU_DIM = 128                     # systolic array is 128x128
+LANE = 128                        # last-dim tile
+SUBLANE = 8                       # second-to-last-dim tile (fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceBudget:
+    """Available resources a kernel IP may consume — the paper's
+    "available FPGA resources", TPU-native.
+
+    ``mxu_available`` mirrors "DSP availability": a deployment where the
+    MXU is saturated by co-resident ops (or absent, e.g. pure-VPU debug
+    paths) sets it False, steering the selector to Conv1-style logic-only
+    variants.  ``precision_bits`` mirrors the paper's operand-width limits
+    (Conv3 is only legal up to 8-bit operands).
+    """
+
+    vmem_bytes: int = VMEM_BYTES
+    hbm_bytes: int = HBM_BYTES
+    mxu_available: bool = True
+    mxu_passes_budget: Optional[int] = None   # None = unlimited
+    vpu_ops_budget: Optional[int] = None      # None = unlimited
+    precision_bits: int = 16                  # max operand width required
+    prefer_parallel_streams: bool = False     # paper: "demand high parallelism"
+
+    def scaled(self, fraction: float) -> "ResourceBudget":
+        """A fractional slice of this budget (e.g. per co-resident op)."""
+        return dataclasses.replace(
+            self,
+            vmem_bytes=int(self.vmem_bytes * fraction),
+            hbm_bytes=int(self.hbm_bytes * fraction),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Footprint:
+    """What one IP costs for one concrete call — paper Table II, machine-readable.
+
+    FPGA column mapping: DSPs -> mxu_passes, LUTs/CLBs -> vpu_ops,
+    BRAM -> vmem_bytes, DDR traffic -> hbm_bytes, WNS -> est_cycles
+    (the timing-role metric), convs/cycle -> outputs_per_pass.
+    """
+
+    vmem_bytes: int
+    hbm_bytes: int
+    mxu_passes: int
+    vpu_ops: int
+    est_cycles: float
+    outputs_per_pass: int = 1       # Conv3/Conv4 produce 2 convolutions/pass
+    max_operand_bits: int = 32      # Conv3 is limited to 8
+
+    def fits(self, budget: ResourceBudget) -> bool:
+        if self.vmem_bytes > budget.vmem_bytes:
+            return False
+        if self.hbm_bytes > budget.hbm_bytes:
+            return False
+        if self.mxu_passes > 0 and not budget.mxu_available:
+            return False
+        if (budget.mxu_passes_budget is not None
+                and self.mxu_passes > budget.mxu_passes_budget):
+            return False
+        if (budget.vpu_ops_budget is not None
+                and self.vpu_ops > budget.vpu_ops_budget):
+            return False
+        if budget.precision_bits > self.max_operand_bits:
+            return False
+        return True
+
+
+def mxu_pass_cycles(m: int, k: int, n: int) -> float:
+    """Cycles for an (m,k)x(k,n) matmul streamed through the 128x128 MXU."""
+    import math
+    tiles = (math.ceil(m / MXU_DIM) * math.ceil(k / MXU_DIM)
+             * math.ceil(n / MXU_DIM))
+    return tiles * MXU_DIM  # one column of results per cycle per tile
+
+
+def vpu_op_cycles(n_ops: int) -> float:
+    """Cycles for ``n_ops`` scalar-equivalent elementwise ops on the VPU."""
+    return n_ops / VPU_OPS_PER_CYCLE
+
+
+def hbm_cycles(n_bytes: int) -> float:
+    """Cycles to move ``n_bytes`` HBM<->VMEM at full bandwidth."""
+    return n_bytes / HBM_BW * CLOCK_HZ

@@ -1,0 +1,132 @@
+"""Resource-driven IP selection — the paper's thesis as code.
+
+Given the op, the concrete shape, and a ResourceBudget (the "available
+FPGA resources"), pick the library member that (a) is *feasible* under
+the budget — fits VMEM, respects the precision ceiling, does not touch
+the MXU if the MXU is spoken for — and (b) minimizes estimated cycles
+among the feasible set, with the paper's tie-breaks:
+
+  * prefer_parallel_streams -> prefer outputs_per_pass==2 (Conv3/Conv4);
+  * a tight mxu_passes_budget prefers fewer MXU passes (Conv1/Conv3);
+  * a tight vpu_ops_budget prefers DSP-style members (Conv2/Conv4).
+
+This module is deliberately small and pure: it is called at trace time
+(never inside jit) and returns a KernelIP whose `.impl` the caller then
+invokes or records (on CPU dry-runs we record the decision and lower
+the pure-jnp twin — see models/ops_dispatch.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.ip import KernelIP
+from repro.core.library import ATTENTION, CONV2D, MATMUL
+from repro.core.resources import Footprint, ResourceBudget
+
+
+def _dtype_bits(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
+    """Ranking key: (primary cost, tie-breaks). Lower is better."""
+    parallel_bonus = 0
+    if budget.prefer_parallel_streams:
+        parallel_bonus = 0 if fp.outputs_per_pass >= 2 else 1
+    mxu_pressure = 0.0
+    if budget.mxu_passes_budget is not None and budget.mxu_passes_budget > 0:
+        mxu_pressure = fp.mxu_passes / budget.mxu_passes_budget
+    vpu_pressure = 0.0
+    if budget.vpu_ops_budget is not None and budget.vpu_ops_budget > 0:
+        vpu_pressure = fp.vpu_ops / budget.vpu_ops_budget
+    # Normalize per produced output so dual-stream members aren't
+    # penalized for doing two ops' work.
+    cycles = fp.est_cycles / max(fp.outputs_per_pass, 1)
+    return (parallel_bonus, cycles * (1.0 + mxu_pressure + vpu_pressure),
+            fp.vmem_bytes)
+
+
+def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
+            fp_args: tuple, fp_kwargs: dict, op_bits: int) -> KernelIP:
+    feasible = []
+    for ip in candidates:
+        fp = ip.footprint(*fp_args, **fp_kwargs)
+        if op_bits > fp.max_operand_bits:
+            continue
+        if not fp.fits(budget):
+            continue
+        feasible.append((_rank(ip, fp, budget), ip.name, ip))
+    if not feasible:
+        raise ValueError(
+            "no feasible IP under budget "
+            f"{budget} for shape args {fp_args} (operand bits {op_bits}); "
+            f"candidates: {[c.name for c in candidates]}")
+    feasible.sort(key=lambda t: t[:2])
+    return feasible[0][2]
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+def select_conv_ip(x_shape, w_shape, *, dual: bool, dtype=jnp.int8,
+                   budget: Optional[ResourceBudget] = None) -> KernelIP:
+    budget = budget or ResourceBudget()
+    n, h, w_, cin = x_shape
+    kh, kw, _, cout = w_shape
+    itemsize = jnp.dtype(dtype).itemsize
+    want = {True: ("conv2d.ip3_packed", "conv2d.ip4_dual"),
+            False: ("conv2d.ip1_vpu", "conv2d.ip2_mxu")}[dual]
+    cands = [CONV2D[name] for name in want]
+    return _select(cands, budget, (n, h, w_, cin, kh, kw, cout),
+                   {"itemsize": itemsize}, op_bits=_dtype_bits(dtype))
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+def select_matmul_ip(a_shape, b_shape, *, dual: bool, dtype=jnp.bfloat16,
+                     budget: Optional[ResourceBudget] = None) -> KernelIP:
+    budget = budget or ResourceBudget()
+    m, k = a_shape[-2], a_shape[-1]
+    n = b_shape[-1]
+    itemsize = jnp.dtype(dtype).itemsize
+    want = {True: ("matmul.mm_dual_shared", "matmul.mm_dual_full"),
+            False: ("matmul.mm_vpu", "matmul.mm_mxu")}[dual]
+    cands = [MATMUL[name] for name in want]
+    return _select(cands, budget, (m, k, n), {"itemsize": itemsize},
+                   op_bits=_dtype_bits(dtype))
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def select_attention_ip(q_shape, kv_shape, *,
+                        budget: Optional[ResourceBudget] = None,
+                        dtype=jnp.bfloat16) -> KernelIP:
+    budget = budget or ResourceBudget()
+    b, hq, sq, d = q_shape
+    _, hkv, skv, _ = kv_shape
+    itemsize = jnp.dtype(dtype).itemsize
+    if sq == 1:
+        cands = [ATTENTION["attention.attn_decode"]]
+        args = (b, hq, hkv, skv, d)
+    else:
+        cands = [ATTENTION["attention.attn_naive"],
+                 ATTENTION["attention.attn_flash"]]
+        args = (b, hq, hkv, sq, skv, d)
+    return _select(cands, budget, args, {"itemsize": itemsize},
+                   op_bits=_dtype_bits(dtype))
+
+
+def describe_plan(plan) -> str:
+    """Render a layer->IP assignment map (used by examples & benches)."""
+    lines = []
+    for site, (ip, fp) in plan.items():
+        lines.append(f"{site:<40s} -> {ip.name:<28s} "
+                     f"vmem={fp.vmem_bytes/2**20:7.2f}MiB "
+                     f"mxu={fp.mxu_passes:<8d} vpu={fp.vpu_ops:.2e} "
+                     f"cyc={fp.est_cycles:.3e}")
+    return "\n".join(lines)

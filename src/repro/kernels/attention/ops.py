@@ -1,0 +1,28 @@
+"""Public wrappers for the attention IP family (selector-aware)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.resources import ResourceBudget
+from repro.kernels.attention.flash import flash_attention
+from repro.kernels.attention.decode import flash_decode
+from repro.kernels.attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, ip: Optional[str] = None,
+              budget: Optional[ResourceBudget] = None,
+              interpret: bool = True):
+    if ip is None:
+        from repro.core.selector import select_attention_ip
+        ip = select_attention_ip(q.shape, k.shape,
+                                 budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    if ip == "attn_flash":
+        return flash_attention(q, k, v, causal=causal, interpret=interpret)
+    if ip == "attn_decode":
+        return flash_decode(q, k, v, interpret=interpret)
+    if ip == "attn_naive":
+        return attention_ref(q, k, v, causal=causal)
+    raise KeyError(f"unknown attention IP {ip!r}")

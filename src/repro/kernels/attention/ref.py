@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the attention IP family.
+
+Contract (GQA-general):
+  q : (B, Hq, Sq, D)
+  k : (B, Hkv, Skv, D)     Hq % Hkv == 0; group = Hq // Hkv
+  v : (B, Hkv, Skv, D)
+  out: (B, Hq, Sq, D)
+`causal=True` masks j > i + (Skv - Sq)  (decode-aligned causal).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  scale: float | None = None) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, group, sq, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    if causal:
+        offs = skv - sq
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(skv)[None, :]
+        mask = kj <= qi + offs
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, scale: float | None = None):
+    """Single-token decode: q (B, Hq, 1, D) against a full KV cache."""
+    return attention_ref(q, k, v, causal=False, scale=scale)

@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the conv2d IP family.
+
+`conv2d` / `conv2d_dual` take an explicit ``ip=`` name or a
+``budget=`` (ResourceBudget) and defer to the resource-driven selector
+— the paper's "automatic adaptation to the available resources".
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.resources import ResourceBudget
+from repro.kernels.conv2d.ip1_vpu import conv2d_ip1
+from repro.kernels.conv2d.ip2_mxu import conv2d_ip2
+from repro.kernels.conv2d.ip3_packed import conv2d_ip3
+from repro.kernels.conv2d.ip4_dual import conv2d_ip4
+
+_SINGLE = {"ip1_vpu": conv2d_ip1, "ip2_mxu": conv2d_ip2}
+_DUAL = {"ip3_packed": conv2d_ip3, "ip4_dual": conv2d_ip4}
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
+           budget: Optional[ResourceBudget] = None,
+           interpret: bool = True) -> jnp.ndarray:
+    """Single-stream convolution through a selected IP (Conv1/Conv2)."""
+    if ip is None:
+        from repro.core.selector import select_conv_ip
+        ip = select_conv_ip(x.shape, w.shape, dual=False,
+                            dtype=x.dtype,
+                            budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    if ip not in _SINGLE:
+        raise KeyError(f"{ip!r} is not a single-stream conv IP "
+                       f"(have {sorted(_SINGLE)})")
+    return _SINGLE[ip](x, w, interpret=interpret)
+
+
+def conv2d_dual(xa: jnp.ndarray, xb: jnp.ndarray, w: jnp.ndarray, *,
+                ip: Optional[str] = None,
+                budget: Optional[ResourceBudget] = None,
+                interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two parallel convolutions through a selected IP (Conv3/Conv4)."""
+    if ip is None:
+        from repro.core.selector import select_conv_ip
+        ip = select_conv_ip(xa.shape, w.shape, dual=True,
+                            dtype=xa.dtype,
+                            budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    if ip not in _DUAL:
+        raise KeyError(f"{ip!r} is not a dual-stream conv IP "
+                       f"(have {sorted(_DUAL)})")
+    return _DUAL[ip](xa, xb, w, interpret=interpret)

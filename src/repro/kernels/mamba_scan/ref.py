@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the selective-scan kernel.
+
+Contract (the SSM core of a Mamba block, per batch element):
+  x  : (B, T, Di)   post-conv activations
+  dt : (B, T, Di)   softplus'd step sizes
+  Bp : (B, T, Ds)   input projection
+  Cp : (B, T, Ds)   output projection
+  A  : (Di, Ds)     negative state matrix
+  y  : (B, T, Di)   y_t = (h_t · Cp_t),  h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) Bp_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def selective_scan_ref(x, dt, bp, cp, a):
+    B, T, Di = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * a[None])
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        return h, jnp.einsum("bis,bs->bi", h, c_t)
+
+    h0 = jnp.zeros((B, Di, a.shape[1]), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          bp.astype(jnp.float32).transpose(1, 0, 2),
+          cp.astype(jnp.float32).transpose(1, 0, 2))
+    h, ys = lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,36 @@
+"""Public wrappers for the matmul IP family (selector-aware)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.resources import ResourceBudget
+from repro.kernels.matmul.mxu import mm_mxu, mm_vpu
+from repro.kernels.matmul.dual import mm_dual_full, mm_dual_shared
+
+_SINGLE = {"mm_mxu": mm_mxu, "mm_vpu": mm_vpu}
+_DUAL = {"mm_dual_shared": mm_dual_shared, "mm_dual_full": mm_dual_full}
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, ip: Optional[str] = None,
+           budget: Optional[ResourceBudget] = None,
+           interpret: bool = True, **tile_kwargs) -> jnp.ndarray:
+    if ip is None:
+        from repro.core.selector import select_matmul_ip
+        ip = select_matmul_ip(a.shape, b.shape, dual=False, dtype=a.dtype,
+                              budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    return _SINGLE[ip](a, b, interpret=interpret, **tile_kwargs)
+
+
+def matmul_dual(a1: jnp.ndarray, a2: jnp.ndarray, b: jnp.ndarray, *,
+                ip: Optional[str] = None,
+                budget: Optional[ResourceBudget] = None,
+                interpret: bool = True, **tile_kwargs):
+    if ip is None:
+        from repro.core.selector import select_matmul_ip
+        ip = select_matmul_ip(a1.shape, b.shape, dual=True, dtype=a1.dtype,
+                              budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    return _DUAL[ip](a1, a2, b, interpret=interpret, **tile_kwargs)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the matmul IP family.
+
+Contract:
+  a : (M, K)   activations
+  b : (K, N)   weights
+  y : (M, N)   int32 accumulation for integer inputs, f32 otherwise
+
+Dual-stream contract (the conv3/conv4 generalization):
+  a1, a2 : (M, K) two activation streams sharing the weight b.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _acc(a, b):
+    if jnp.issubdtype(a.dtype, jnp.integer) and jnp.issubdtype(b.dtype, jnp.integer):
+        return jnp.int32
+    return jnp.float32
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=_acc(a, b))
+
+
+def matmul_dual_ref(a1: jnp.ndarray, a2: jnp.ndarray, b: jnp.ndarray):
+    return matmul_ref(a1, b), matmul_ref(a2, b)

@@ -1,0 +1,348 @@
+"""Compiled-artifact analysis: collective-bytes parser + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs / bytes; collective traffic is NOT
+in there, so we parse the post-optimization HLO text and sum operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Hardware constants from core.resources (TPU v5e:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.resources import HBM_BW, ICI_BW_PER_LINK, PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[256,4096,128]{2,1,0}" — capture dtype + dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result line: "%name = f32[...] all-reduce(...)" or tuple results
+_INSTR_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\]{},]+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"[\s(]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(\d+(?:,\d+)*)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum *operand* bytes per collective kind from optimized HLO text.
+
+    For all-gather the printed result is the gathered (large) buffer:
+    operand = result / group_size.  For reduce-scatter the result is the
+    scattered buffer: operand = result * group_size.  For all-reduce /
+    all-to-all / collective-permute operand == result.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_text, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(result_text)
+        g = _group_size(line)
+        if op == "all-gather":
+            nbytes = nbytes / max(g, 1)
+        elif op == "reduce-scatter":
+            nbytes = nbytes * max(g, 1)
+        out[op] += nbytes
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def hlo_op_histogram(hlo_text: str, ops=("transpose", "reshape", "copy",
+                                         "convert", "fusion", "while")):
+    hist = {}
+    for op in ops:
+        hist[op] = len(re.findall(rf"=\s+[\w\[\]{{}},()\s]*?\b{op}\(", hlo_text))
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # counted HLO FLOPs (all chips)
+    hbm_bytes: float            # counted HLO bytes accessed (all chips)
+    coll_bytes: float           # counted collective operand bytes (all chips)
+    chips: int
+    model_flops: float = 0.0    # 6·N_active·D analytic useful FLOPs
+    min_hbm_bytes: float = 0.0  # analytic minimum traffic (all chips)
+    min_coll_bytes: float = 0.0
+    ici_links: int = 4
+
+    def _t(self, flops, hbm, coll):
+        return {"compute": flops / (self.chips * PEAK_BF16_FLOPS),
+                "memory": hbm / (self.chips * HBM_BW),
+                "collective": coll / (self.chips * ICI_BW_PER_LINK
+                                      * self.ici_links)}
+
+    @property
+    def t_compute(self):
+        return self._t(self.flops, self.hbm_bytes, self.coll_bytes)["compute"]
+
+    @property
+    def t_memory(self):
+        return self._t(self.flops, self.hbm_bytes, self.coll_bytes)["memory"]
+
+    @property
+    def t_collective(self):
+        return self._t(self.flops, self.hbm_bytes,
+                       self.coll_bytes)["collective"]
+
+    @property
+    def dominant(self) -> str:
+        t = self._t(self.flops, self.hbm_bytes, self.coll_bytes)
+        return max(t, key=t.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self._t(self.flops, self.hbm_bytes,
+                           self.coll_bytes).values())
+
+    @property
+    def ideal_time(self) -> float:
+        """Bound time of an ideal implementation: useful FLOPs, minimum
+        HBM traffic, minimum collective traffic."""
+        return max(self._t(self.model_flops, self.min_hbm_bytes,
+                           self.min_coll_bytes).values())
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal bound / actual bound — 1.0 means the compiled graph is
+        at the hardware roofline for this workload (the §Perf score)."""
+        if self.bound_time == 0:
+            return 0.0
+        return min(self.ideal_time / self.bound_time, 1.0)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "min_hbm_bytes": self.min_hbm_bytes,
+            "min_coll_bytes": self.min_coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "bound_time_s": self.bound_time, "ideal_time_s": self.ideal_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N·D per token for
+    inference (prefill: xD tokens; decode: 1 token/seq)."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per_tok = 6 * n_active if shape.kind == "train" else 2 * n_active
+    return float(per_tok) * tokens
+
+
+def ideal_traffic(cfg, shape, dp: int, tp: int, chips: int,
+                  fsdp: bool = False):
+    """Analytic minimum (HBM bytes, collective bytes), summed over chips.
+
+    Documented approximations (EXPERIMENTS.md §Roofline methodology):
+      * params sharded over tp (plus dp when fsdp); per-chip *storage*
+        N/tp (N/(tp·dp) under fsdp).
+      * train HBM: params read fwd+bwd+update + grads w+r + opt r+w
+        + per-group boundary activations (save+reload, remat=block)
+        + logits write+read + token embeds.  Under fsdp the gathered
+        weights additionally pass HBM twice (write on gather, read).
+      * decode HBM: local param shard read + full KV/state cache spread
+        over all chips (the 2D-tensor-parallel lower bound: weights stay
+        sharded, tiny decode activations are psum'd instead of weights
+        being gathered); prefill: params + activations + cache write.
+      * train collectives: DP grad ring all-reduce 2·G·(dp-1)/dp (or
+        reduce-scatter+all-gather under fsdp, same bytes) + fsdp weight
+        all-gathers (fwd+bwd) + TP 2 all-reduce/layer fwd + 2 bwd of the
+        (B,S,D) activation (ring: 2x each) + MoE all-to-alls.
+      * decode/prefill collectives: TP activation all-reduces (+MoE a2a).
+    """
+    p_item = jnp_itemsize(cfg.param_dtype)
+    m_item = jnp_itemsize(cfg.moment_dtype)
+    c_item = jnp_itemsize(cfg.compute_dtype)
+    N = cfg.param_count()
+    shard = tp * (dp if fsdp else 1)
+    params_store_dev = N * p_item / shard
+    opt_dev = 2 * N * m_item / shard
+    B, S = shape.global_batch, shape.seq_len
+    B_loc = B / dp if B >= dp else B
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    tokens_loc = B_loc * (S if shape.kind != "decode" else 1)
+
+    from repro.models.transformer import block_period
+    P = block_period(cfg)
+    G = max(L // P, 1)
+
+    if shape.kind == "train":
+        # weights must be materialized per chip at N/tp for the big
+        # activation matmuls, whether stored locally or gathered.
+        params_use_dev = N * p_item / tp
+        hbm_dev = (3 * params_use_dev + 2 * opt_dev + 2 * N * 4 / shard
+                   + 2 * G * B_loc * S * D * c_item                # boundaries
+                   + 2 * B_loc * S * V / tp * c_item               # logits
+                   + 2 * B_loc * S * D * c_item)                   # embeds
+        coll_dev = (2 * (N * 4 / shard) * (dp - 1) / dp            # grad sync
+                    + (8 if tp > 1 else 0) * L * B_loc * S * D * c_item)
+        if fsdp:
+            coll_dev += 2 * params_use_dev * (dp - 1) / dp         # w gathers
+        if cfg.moe:
+            coll_dev += 4 * tokens_loc * D * c_item * cfg.moe.top_k \
+                * (L // cfg.moe.moe_every) / L
+    elif shape.kind == "prefill":
+        cache_dev = L * B_loc * S * cfg.n_kv_heads * cfg.head_dim * 2 * c_item
+        hbm_dev = (params_store_dev + 2 * G * B_loc * S * D * c_item
+                   + cache_dev)
+        coll_dev = (4 if tp > 1 else 0) * L * B_loc * S * D * c_item
+        if cfg.moe:
+            coll_dev += 2 * tokens_loc * D * c_item * cfg.moe.top_k \
+                * (L // cfg.moe.moe_every) / L
+    else:  # decode
+        n_attn = sum(1 for k in cfg.attn_layout if k == "attn")
+        cache_total = B * S * cfg.n_kv_heads * cfg.head_dim * 2 * c_item * n_attn
+        if cfg.family == "encdec":
+            cache_total *= 2  # self + cross caches
+        state_total = 0.0
+        if any(k == "mamba" for k in cfg.attn_layout):
+            n_m = sum(1 for k in cfg.attn_layout if k == "mamba")
+            state_total += n_m * B * cfg.d_inner * (cfg.mamba.d_state * 4
+                                                    + c_item)
+        if any(k == "rwkv" for k in cfg.attn_layout):
+            hs = cfg.rwkv.head_size
+            state_total += L * B * (D // hs) * hs * hs * 4
+        # best case: params stay sharded (2D TP), cache spread over chips
+        hbm_dev = params_store_dev + (cache_total + state_total) / chips
+        coll_dev = (4 if tp > 1 else 0) * L * B_loc * 1 * D * c_item \
+            + (2 * L * B_loc * D * c_item if fsdp else 0)  # dp-axis psums
+    return hbm_dev * chips, coll_dev * chips
+
+
+def jnp_itemsize(dtype_str: str) -> int:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype_str).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Kernel-deployed memory model
+# ---------------------------------------------------------------------------
+def deployed_traffic(cfg, shape, dp: int, tp: int, chips: int,
+                     fsdp: bool = False) -> float:
+    """HBM bytes/step (all chips) of the TPU deployment where attention
+    runs through the Pallas flash/flash-decode kernels (score chunks are
+    VMEM-resident — their HBM traffic is q/k/v/o only) and every other
+    major op's output crosses HBM exactly once (no fusion credit).
+
+    This is the deployment-true memory term the CPU-twin graph cannot
+    express: XLA-CPU materializes score chunks that the Pallas kernel
+    holds in VMEM, and `cost_analysis()` re-counts each buffer at both
+    producer and consumers.  Used for the `deployed` rows of §Perf.
+    """
+    c_item = jnp_itemsize(cfg.compute_dtype)
+    p_item = jnp_itemsize(cfg.param_dtype)
+    m_item = jnp_itemsize(cfg.moment_dtype)
+    N = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    B_loc = B / dp if B >= dp else B
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qkv_dim = (Hq + 2 * Hkv) * Dh / tp if Hq % tp == 0 else (Hq + 2 * Hkv) * Dh
+    shard = tp * (dp if fsdp else 1)
+
+    if shape.kind == "decode":
+        S_act = 1
+    else:
+        S_act = S
+    act = B_loc * S_act * c_item
+
+    per_attn = act * (2 * D + 2 * qkv_dim + 2 * Hq * Dh / max(tp, 1) + 2 * D)
+    if shape.kind == "decode":
+        # flash-decode sweeps the cache once
+        n_attn = sum(1 for k in cfg.attn_layout if k == "attn")
+        cache = (B * S * Hkv * Dh * 2 * c_item * n_attn) / chips
+        per_attn += 0  # cache counted once below
+    ffn_f = F / tp if F % tp == 0 else F
+    per_ffn = act * (2 * D + 4 * ffn_f + 2 * D)
+    if cfg.moe:
+        per_ffn *= cfg.moe.top_k * 1.25 / cfg.moe.moe_every + (
+            1 - 1 / cfg.moe.moe_every)
+    mamba_di = cfg.d_inner / tp
+    per_mamba = act * (2 * D + 8 * mamba_di + 2 * D)
+    per_rwkv = act * (2 * D + 12 * D + 4 * F)
+
+    layer_bytes = 0.0
+    for kind in cfg.attn_layout:
+        layer_bytes += {"attn": per_attn + per_ffn,
+                        "mamba": per_mamba + per_ffn if cfg.moe else per_mamba + per_ffn,
+                        "rwkv": per_rwkv}[kind]
+    if cfg.enc_layers:
+        layer_bytes += cfg.enc_layers * (per_attn + per_ffn) \
+            + cfg.n_layers * per_attn  # cross-attn
+    logits = 2 * B_loc * S_act * V / max(tp, 1) * c_item
+
+    if shape.kind == "train":
+        # fwd + remat-recompute fwd + bwd ~ 3x activation traffic;
+        # params read fwd+bwd + grads + opt update
+        total = (3 * layer_bytes + 2 * logits
+                 + 3 * N * p_item / tp + 2 * N * 4 / shard
+                 + 2 * 2 * N * m_item / shard)
+    elif shape.kind == "prefill":
+        cache_w = cfg.n_layers * B_loc * S * Hkv * Dh * 2 * c_item
+        total = layer_bytes + logits + N * p_item / tp + cache_w
+    else:
+        n_attn = sum(1 for k in cfg.attn_layout if k == "attn")
+        cache = (B * S * Hkv * Dh * 2 * c_item * n_attn
+                 * (2 if cfg.family == "encdec" else 1)) / chips
+        state = 0.0
+        if any(k == "mamba" for k in cfg.attn_layout):
+            n_m = sum(1 for k in cfg.attn_layout if k == "mamba")
+            state += n_m * B * cfg.d_inner * (cfg.mamba.d_state * 4 + c_item) / chips
+        if any(k == "rwkv" for k in cfg.attn_layout):
+            hs = cfg.rwkv.head_size
+            state += cfg.n_layers * B * (D // hs) * hs * hs * 4 / chips
+        total = layer_bytes + logits + N * p_item / shard + cache + state
+    return total * chips

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+#   init.  This file is the ONLY place the 512-placeholder-device trick
+#   is applied (smoke tests and benches see the real single device).
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.distributed.sharding import (ShardingPolicy, batch_pspecs,  # noqa: E402
+                                        cache_pspecs, params_pspecs,
+                                        state_pspecs, to_shardings)
+from repro.launch.analysis import (Roofline, collective_bytes,  # noqa: E402
+                                   hlo_op_histogram, ideal_traffic,
+                                   model_flops)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.models.frontends import input_specs  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+
+
+def _sharded_bytes(tree, spec_tree, mesh) -> float:
+    """Analytic bytes/device for a (possibly abstract) pytree + specs."""
+    sizes = mesh_axis_sizes(mesh)
+
+    def leaf_bytes(leaf, spec):
+        shard = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shard *= sizes[a]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        return n * jnp.dtype(leaf.dtype).itemsize / shard
+
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(spec_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        total += leaf_bytes(leaf, spec)
+    return total
+
+
+def build_cell(cfg, shape_name: str, mesh, policy=ShardingPolicy()):
+    """Returns (fn, abstract_args, in_shardings, static_bytes/device)."""
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    opt_cfg = AdamWConfig(moment_dtype=cfg.moment_dtype)
+
+    if shape.kind == "train":
+        state = api.init_train_state_abstract(cfg, opt_cfg)
+        sspec = state_pspecs(cfg, mesh, state, policy)
+        bspec = batch_pspecs(cfg, mesh, specs)
+        fn = lambda s, b: api.train_step(cfg, opt_cfg, s, b)
+        args = (state, specs)
+        shardings = (to_shardings(mesh, sspec), to_shardings(mesh, bspec))
+        static = _sharded_bytes(state, sspec, mesh)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        params = api.init_params_abstract(cfg)
+        pspec = params_pspecs(cfg, mesh, params, policy)
+        bspec = batch_pspecs(cfg, mesh, specs)
+        fn = lambda p, b: api.prefill_step(cfg, p, b)
+        args = (params, specs)
+        shardings = (to_shardings(mesh, pspec), to_shardings(mesh, bspec))
+        static = _sharded_bytes(params, pspec, mesh)
+        donate = ()
+    else:  # decode
+        params = api.init_params_abstract(cfg)
+        pspec = params_pspecs(cfg, mesh, params, policy)
+        caches = jax.eval_shape(
+            lambda: api.init_decode_caches(cfg, shape.global_batch,
+                                           shape.seq_len))
+        cspec = cache_pspecs(cfg, mesh, caches, policy)
+        bspec = batch_pspecs(cfg, mesh, specs)
+        tokens = specs["tokens"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = lambda p, c, t, i: api.decode_step(cfg, p, c, t, i)
+        args = (params, caches, tokens, pos)
+        shardings = (to_shardings(mesh, pspec), to_shardings(mesh, cspec),
+                     to_shardings(mesh, bspec)["tokens"],
+                     jax.NamedSharding(mesh, P()))
+        static = (_sharded_bytes(params, pspec, mesh)
+                  + _sharded_bytes(caches, cspec, mesh))
+        donate = (1,)
+    return fn, args, shardings, static, donate
+
+
+def _compile_and_measure(cfg, shape_name: str, mesh, policy):
+    """Lower+compile one graph; return raw metrics dict."""
+    t0 = time.time()
+    fn, args, shardings, static_bytes, donate = build_cell(
+        cfg, shape_name, mesh, policy)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not support it
+            mem_d = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        hist = hlo_op_histogram(hlo)
+        hlo_len = len(hlo)
+        del hlo, compiled, lowered
+    return {
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "static_bytes_per_device": static_bytes,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem_d, "collectives": coll, "hlo_ops": hist,
+        "hlo_chars": hlo_len,
+    }
+
+
+def _calibration_cfgs(cfg):
+    """1-group and 2-group unrolled configs at full width.
+
+    XLA counts a while-loop body once; lowering unrolled graphs at 1 and
+    2 groups gives per-group deltas to extrapolate true totals:
+        total = m2 + (n_groups - 2) * (m2 - m1).
+    Inner *time* scans (mamba/rwkv recurrences) stay while-loops — a
+    ~1% FLOP undercount, recorded in EXPERIMENTS.md methodology.
+    """
+    from repro.models.transformer import block_period
+    P = block_period(cfg)
+    n_groups = cfg.n_layers // P
+    rep = {"scan_layers": False, "remat": cfg.remat}
+    c1 = dataclasses.replace(cfg, n_layers=P, **rep)
+    c2 = dataclasses.replace(cfg, n_layers=2 * P, **rep)
+    if cfg.enc_layers:
+        c1 = dataclasses.replace(c1, enc_layers=1)
+        c2 = dataclasses.replace(c2, enc_layers=2)
+    return c1, c2, n_groups
+
+
+def _extrapolate(m1: dict, m2: dict, n_groups: int) -> dict:
+    """total = m2 + (G-2) * (m2 - m1), per scalar metric."""
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        out[key] = m2[key] + (n_groups - 2) * (m2[key] - m1[key])
+    coll = {}
+    for k, v2 in m2["collectives"].items():
+        if k == "counts":
+            continue
+        v1 = m1["collectives"][k]
+        coll[k] = v2 + (n_groups - 2) * (v2 - v1)
+    out["collectives"] = coll
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §Perf variants: each is a real graph/sharding change, run via
+#   --variant <name> (tag defaults to the variant name).
+# ---------------------------------------------------------------------------
+VARIANTS = {
+    # attention score chunks materialized bf16 (stats stay f32)
+    "bf16scores": lambda cfg: dataclasses.replace(
+        cfg, attn_score_dtype="bfloat16"),
+    # MoE dispatch via scatter/gather instead of one-hot einsums
+    "scattermoe": lambda cfg: dataclasses.replace(
+        cfg, moe_dispatch="scatter") if cfg.moe else cfg,
+    # remat policy: save matmul outputs instead of recomputing everything
+    "dotsremat": lambda cfg: dataclasses.replace(cfg, remat="block_dots"),
+    # skip fully-masked causal kv chunks (exact; the Pallas kernel's
+    # pl.when block-skip expressed as lax.cond in the graph twin)
+    "causalskip": lambda cfg: dataclasses.replace(cfg, causal_skip=True),
+    # pad attention heads up to the TP degree so they shard 16-way
+    # (zero-extended heads = identical function; removes replicated
+    # attention compute for 56-head/8-kv archs)
+    "padheads": lambda cfg: dataclasses.replace(
+        cfg, n_heads=-(-cfg.n_heads // 16) * 16,
+        n_kv_heads=16 if cfg.n_kv_heads % 16 else cfg.n_kv_heads)
+    if (cfg.n_heads % 16 or cfg.n_kv_heads % 16) else cfg,
+    # capacity factor 1.25 -> 1.0: shrinks every expert tensor 20% for
+    # ~2% dropped tokens (prod-standard trade)
+    "cap1": lambda cfg: dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    if cfg.moe else cfg,
+    # the combined optimized configuration (bf16scores excluded: refuted
+    # on the CPU-twin metric — CPU bf16 emulation inserts f32 converts;
+    # dotsremat is applied to train cells only, see run_cell)
+    "opt": lambda cfg: VARIANTS["padheads"](VARIANTS["causalskip"](
+        VARIANTS["cap1"](VARIANTS["dotsremat"](VARIANTS["scattermoe"](cfg))))),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, policy=ShardingPolicy(),
+             tag: str = "", calibrate: bool = True,
+             variant: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    if variant and not tag:
+        tag = variant
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+        if variant == "opt" and shape.kind != "train" \
+                and cfg.remat == "block_dots":
+            # saving dot outputs is pure overhead without a backward pass
+            cfg = dataclasses.replace(cfg, remat="block")
+    ok, why = shape_applicable(cfg, shape)
+    record = {"cell": cell_id, "arch": arch, "shape": shape_name,
+              "mesh": mesh_name, "tag": tag or "baseline"}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if cfg.fsdp and not policy.fsdp:
+        policy = dataclasses.replace(policy, fsdp=True)
+    try:
+        # 1) the deployable scan graph: memory + collective schedule
+        main = _compile_and_measure(cfg, shape_name, mesh, policy)
+        # 2) cost calibration: unrolled 1-group / 2-group graphs
+        if calibrate:
+            c1, c2, n_groups = _calibration_cfgs(cfg)
+            m1 = _compile_and_measure(c1, shape_name, mesh, policy)
+            m2 = _compile_and_measure(c2, shape_name, mesh, policy)
+            tot = _extrapolate(m1, m2, n_groups)
+            cal = {"n_groups": n_groups,
+                   "cal1_compile_s": m1["compile_s"],
+                   "cal2_compile_s": m2["compile_s"]}
+        else:
+            tot = {"flops": main["flops"],
+                   "bytes_accessed": main["bytes_accessed"],
+                   "collectives": {k: v for k, v in
+                                   main["collectives"].items()
+                                   if k != "counts"}}
+            cal = {"n_groups": None}
+
+        mf = model_flops(cfg, shape)
+        sizes = mesh_axis_sizes(mesh)
+        tp = sizes.get("model", 1)
+        dp = chips // tp
+        min_hbm, min_coll = ideal_traffic(cfg, shape, dp, tp, chips,
+                                          fsdp=policy.fsdp)
+        roof = Roofline(flops=tot["flops"] * chips,
+                        hbm_bytes=tot["bytes_accessed"] * chips,
+                        coll_bytes=tot["collectives"]["total"] * chips,
+                        chips=chips, model_flops=mf,
+                        min_hbm_bytes=min_hbm, min_coll_bytes=min_coll)
+        record.update(
+            status="ok", chips=chips,
+            lower_s=main["lower_s"], compile_s=main["compile_s"],
+            static_bytes_per_device=main["static_bytes_per_device"],
+            memory=main["memory"],
+            scan_graph={"flops": main["flops"],
+                        "bytes_accessed": main["bytes_accessed"],
+                        "collectives": {k: v for k, v in
+                                        main["collectives"].items()
+                                        if k != "counts"},
+                        "collective_counts": main["collectives"]["counts"],
+                        "hlo_ops": main["hlo_ops"],
+                        "hlo_chars": main["hlo_chars"]},
+            calibration=cal,
+            totals_per_device=tot,
+            roofline=roof.as_dict(),
+        )
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="", choices=[""] + list(VARIANTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    policy = ShardingPolicy(fsdp=args.fsdp)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, multi, out_dir,
+                               force=args.force, policy=policy, tag=args.tag,
+                               calibrate=not args.no_calibrate,
+                               variant=args.variant)
+                dt = time.time() - t0
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']:<10s} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"mem/dev={rec['static_bytes_per_device']/2**30:.2f}GiB")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status:>7s}] {rec['cell']:<55s} {dt:6.1f}s {extra}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Unified model API over decoder-only and encoder-decoder stacks.
+
+  init_params / init_params_abstract
+  loss_fn(cfg, params, batch)
+  train_step(cfg, opt_cfg, state, batch)       TrainState -> TrainState
+  prefill_step / decode_step
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               init_opt_state)
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def init_params_abstract(cfg: ModelConfig):
+    return _mod(cfg).init_params_abstract(cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return _mod(cfg).loss_fn(cfg, params, batch)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params, init_opt_state(opt_cfg, params))
+
+
+def init_train_state_abstract(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0)))
+
+
+def train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, state: TrainState,
+               batch):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(state.params)
+    params, opt, opt_metrics = apply_updates(opt_cfg, state.params, grads,
+                                             state.opt)
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return TrainState(params, opt), metrics
+
+
+def prefill_step(cfg: ModelConfig, params, batch, *, pad_to=None):
+    return _mod(cfg).prefill(cfg, params, batch, pad_to=pad_to)
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
+    return _mod(cfg).decode_step(cfg, params, caches, tokens, pos)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        L = cfg.n_layers
+        cd = cfg.dtype("compute")
+        Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((L, batch, max_len, Hkv, Dh), cd),
+                "v": jnp.zeros((L, batch, max_len, Hkv, Dh), cd),
+                "xk": jnp.zeros((L, batch, max_len, Hkv, Dh), cd),
+                "xv": jnp.zeros((L, batch, max_len, Hkv, Dh), cd)}
+    return transformer.init_decode_caches(cfg, batch, max_len)

@@ -1,0 +1,139 @@
+"""Shared model blocks: norms, MLPs, embeddings, RoPE.
+
+Functional style: ``init_*`` returns a param pytree (plain dicts of
+jnp arrays), ``apply`` functions are pure.  Layer-stacked params carry a
+leading group axis for lax.scan (see transformer.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, shape_prefix=()):
+    pd = cfg.dtype("param")
+    if cfg.norm == "layernorm_nonparam":
+        return {}  # OLMo: no learnable scale/bias
+    p = {"scale": jnp.ones(shape_prefix + (cfg.d_model,), pd)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros(shape_prefix + (cfg.d_model,), pd)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def init_ffn(cfg: ModelConfig, key, shape_prefix=(), d_in=None, d_ff=None):
+    pd = cfg.dtype("param")
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d ** -0.5
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(k1, shape_prefix + (d, f)) * scale).astype(pd),
+            "w_up": (jax.random.normal(k2, shape_prefix + (d, f)) * scale).astype(pd),
+            "w_down": (jax.random.normal(k3, shape_prefix + (f, d)) * f ** -0.5).astype(pd),
+        }
+    return {
+        "w_in": (jax.random.normal(k1, shape_prefix + (d, f)) * scale).astype(pd),
+        "w_down": (jax.random.normal(k3, shape_prefix + (f, d)) * f ** -0.5).astype(pd),
+    }
+
+
+def apply_ffn(cfg: ModelConfig, p, x):
+    cd = cfg.dtype("compute")
+    x = x.astype(cd)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(cd))
+        u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(cd))
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(cd))
+        h = jax.nn.gelu(h) if cfg.activation == "gelu" else jnp.square(jax.nn.relu(h))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+def init_embed(cfg: ModelConfig, key):
+    pd = cfg.dtype("param")
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model))
+                   * cfg.d_model ** -0.5).astype(pd)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size))
+                        * cfg.d_model ** -0.5).astype(pd)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["embed"], tokens, axis=0).astype(cfg.dtype("compute"))
+
+
+def lm_logits(cfg: ModelConfig, p, x):
+    cd = cfg.dtype("compute")
+    w = (p["embed"].T if cfg.tie_embeddings else p["lm_head"]).astype(cd)
+    return jnp.einsum("...d,dv->...v", x.astype(cd), w).astype(cfg.dtype("logit"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig, positions):
+    """positions: (...,) int32 -> cos/sin (..., rot_dim/2)."""
+    rot = cfg.head_dim if cfg.rope_style == "full" else cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(cfg: ModelConfig, x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (B, S, rot/2) or (S, rot/2)."""
+    if cfg.rope_style == "none":
+        return x
+    rot = cfg.head_dim if cfg.rope_style == "full" else cfg.head_dim // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    while cos.ndim < x1.ndim:  # broadcast over head axis
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if rot < cfg.head_dim else out
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels, *, z_loss: float = 1e-4):
+    """Token-mean cross entropy (f32 accumulation) + z-loss regularizer."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

@@ -1,0 +1,213 @@
+"""Encoder-decoder stack (seamless-m4t backbone).
+
+Encoder: non-causal attention blocks over precomputed frame embeddings
+(the modality frontend is a stub per the assignment).  Decoder: causal
+self-attention + cross-attention to the encoder output + FFN.
+Cross-attention K/V are computed once at prefill and frozen.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.blocks import (apply_ffn, apply_norm, embed_tokens,
+                                 init_embed, init_ffn, init_norm, lm_logits,
+                                 softmax_xent)
+from repro.models.transformer import _sinusoidal
+
+
+def _init_enc_block(cfg, key, prefix):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg, prefix),
+            "attn": attn_mod.init_attn(cfg, k1, prefix),
+            "ln2": init_norm(cfg, prefix),
+            "ffn": init_ffn(cfg, k2, prefix)}
+
+
+def _init_dec_block(cfg, key, prefix):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg, prefix),
+            "self_attn": attn_mod.init_attn(cfg, k1, prefix),
+            "ln_x": init_norm(cfg, prefix),
+            "cross_attn": attn_mod.init_attn(cfg, k2, prefix),
+            "ln2": init_norm(cfg, prefix),
+            "ffn": init_ffn(cfg, k3, prefix)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ke, kd, kemb = jax.random.split(key, 3)
+    params = init_embed(cfg, kemb)
+    params["enc_blocks"] = _init_enc_block(cfg, ke, (cfg.enc_layers,))
+    params["dec_blocks"] = _init_dec_block(cfg, kd, (cfg.n_layers,))
+    params["enc_norm"] = init_norm(cfg)
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+def init_params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def encode(cfg: ModelConfig, params, embeds):
+    """embeds: (B, S_enc, D) precomputed frame embeddings (stub frontend)."""
+    B, S, _ = embeds.shape
+    x = embeds.astype(cfg.dtype("compute"))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, positions)
+
+    def body(x, p):
+        h = apply_norm(cfg, p["ln1"], x)
+        out, _ = attn_mod.attn_block(cfg, p["attn"], h, positions,
+                                     causal=False)
+        x = x + out.astype(x.dtype)
+        h2 = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_ffn(cfg, p["ffn"], h2).astype(x.dtype)
+        return x, None
+
+    if cfg.remat in ("block", "block_dots"):
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "block"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["enc_blocks"])
+    else:
+        for g in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[g], params["enc_blocks"]))
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _cross_attn(cfg, p, x, enc_out):
+    """Full (non-cached) cross-attention: q from x, k/v from enc_out."""
+    cd = cfg.dtype("compute")
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x.astype(cd),
+                   p["wq"].astype(cd)).reshape(B, S, Hq, Dh)
+    k = jnp.einsum("bsd,dh->bsh", enc_out.astype(cd),
+                   p["wk"].astype(cd)).reshape(B, Se, Hkv, Dh)
+    v = jnp.einsum("bsd,dh->bsh", enc_out.astype(cd),
+                   p["wv"].astype(cd)).reshape(B, Se, Hkv, Dh)
+    o = attn_mod.full_attention(cfg, q, k, v, causal=False)
+    return attn_mod._merge_heads(cfg, p, o), k, v
+
+
+def decode_full(cfg: ModelConfig, params, enc_out, tokens,
+                collect_cache: bool = False):
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, positions)
+
+    def body(x, p):
+        h = apply_norm(cfg, p["ln1"], x)
+        out, (k, v) = attn_mod.attn_block(cfg, p["self_attn"], h, positions,
+                                          causal=True)
+        x = x + out.astype(x.dtype)
+        hx = apply_norm(cfg, p["ln_x"], x)
+        out, ck, cv = _cross_attn(cfg, p["cross_attn"], hx, enc_out)
+        x = x + out.astype(x.dtype)
+        h2 = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_ffn(cfg, p["ffn"], h2).astype(x.dtype)
+        cache = ({"k": k, "v": v, "xk": ck, "xv": cv}
+                 if collect_cache else {})
+        return x, cache
+
+    if cfg.remat in ("block", "block_dots") and not collect_cache:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "block"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        x, caches = lax.scan(body, x, params["dec_blocks"])
+    else:
+        outs = []
+        for g in range(cfg.n_layers):
+            x, c = body(x, jax.tree.map(lambda t: t[g], params["dec_blocks"]))
+            outs.append(c)
+        caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+                  if collect_cache else None)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, (caches if collect_cache else None)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["embeds"])
+    x, _ = decode_full(cfg, params, enc_out, batch["tokens"])
+    logits = lm_logits(cfg, params, x)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(cfg: ModelConfig, params, batch, *, pad_to=None):
+    enc_out = encode(cfg, params, batch["embeds"])
+    x, caches = decode_full(cfg, params, enc_out, batch["tokens"],
+                            collect_cache=True)
+    logits = lm_logits(cfg, params, x[:, -1:, :])[:, 0]
+    S = batch["tokens"].shape[1]
+    if pad_to and pad_to > S:
+        pad = pad_to - S
+        caches = dict(caches)
+        for key in ("k", "v"):
+            caches[key] = jnp.pad(caches[key],
+                                  ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, caches, S
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
+    """One decoder token. caches: {'k','v' (L,B,S,Hkv,Dh), 'xk','xv'}."""
+    B = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, attn_mod.positions_b1(pos, B))
+
+    def body(x, inp):
+        p, c = inp
+        h = apply_norm(cfg, p["ln1"], x)
+        out, ck, cv = attn_mod.decode_attn(cfg, p["self_attn"], h,
+                                           c["k"], c["v"], pos)
+        x = x + out.astype(x.dtype)
+        hx = apply_norm(cfg, p["ln_x"], x)
+        out = _cached_cross_attn(cfg, p["cross_attn"], hx, c["xk"], c["xv"])
+        x = x + out.astype(x.dtype)
+        h2 = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_ffn(cfg, p["ffn"], h2).astype(x.dtype)
+        return x, {"k": ck, "v": cv, "xk": c["xk"], "xv": c["xv"]}
+
+    if cfg.scan_layers:
+        x, new_caches = lax.scan(body, x, (params["dec_blocks"], caches))
+    else:
+        outs = []
+        for g in range(cfg.n_layers):
+            gp = jax.tree.map(lambda t: t[g], params["dec_blocks"])
+            gc = jax.tree.map(lambda t: t[g], caches)
+            x, nc = body(x, (gp, gc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+def _cached_cross_attn(cfg, p, x, k, v):
+    cd = cfg.dtype("compute")
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = Hq // Hkv
+    q = jnp.einsum("bsd,dh->bsh", x.astype(cd),
+                   p["wq"].astype(cd)).reshape(B, Hkv, g, Dh)
+    qf = q.astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    o = o.reshape(B, 1, Hq, Dh).astype(x.dtype)
+    return attn_mod._merge_heads(cfg, p, o)

@@ -1,0 +1,64 @@
+"""Modality frontend STUBS + input spec providers.
+
+Per the assignment, [audio]/[vlm] archs specify the transformer
+backbone only: ``input_specs()`` provides precomputed frame/patch
+embeddings.  This module is the single source of truth for what each
+(arch x shape x step-kind) consumes — used identically by the dry-run
+(abstract ShapeDtypeStructs) and by tests/examples (concrete sampled
+arrays via ``make_inputs(..., abstract=False)``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the step implied by shape.kind."""
+    B, S = shape.global_batch, shape.seq_len
+    cd = cfg.dtype("compute")
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"embeds": _spec((B, S, cfg.d_model), cd),
+                    "tokens": _spec((B, S), jnp.int32),
+                    "labels": _spec((B, S), jnp.int32)}
+        if cfg.embed_inputs:
+            return {"embeds": _spec((B, S, cfg.d_model), cd),
+                    "labels": _spec((B, S), jnp.int32)}
+        return {"tokens": _spec((B, S), jnp.int32),
+                "labels": _spec((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"embeds": _spec((B, S, cfg.d_model), cd),
+                    "tokens": _spec((B, S), jnp.int32)}
+        if cfg.embed_inputs:
+            return {"embeds": _spec((B, S, cfg.d_model), cd)}
+        return {"tokens": _spec((B, S), jnp.int32)}
+    # decode: one new token against a cache of S (caches built separately)
+    return {"tokens": _spec((B, 1), jnp.int32)}
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,
+                abstract: bool = True) -> Dict[str, Any]:
+    specs = input_specs(cfg, shape)
+    if abstract:
+        return specs
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(0, 1, s.shape).astype(np.float32)).astype(s.dtype)
+    return out

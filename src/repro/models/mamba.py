@@ -1,0 +1,136 @@
+"""Mamba-1 selective SSM block (jamba's mamba sublayers).
+
+Sequential selective scan (lax.scan over time) carrying h (B, d_inner,
+d_state); y_t is produced on the fly so the (d_inner x d_state) state is
+never materialized across time — the standard memory-sane JAX
+formulation (the fused-kernel trick, expressed with scan).
+
+Decode carries (conv_state, ssm_state) — O(1) in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def init_mamba(cfg: ModelConfig, key, shape_prefix=()):
+    mc = cfg.mamba
+    D, di, ds, dtr = cfg.d_model, cfg.d_inner, mc.d_state, cfg.dt_rank
+    pd = cfg.dtype("param")
+    ks = jax.random.split(key, 6)
+    s = D ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], shape_prefix + (D, 2 * di)) * s).astype(pd),
+        "conv_w": (jax.random.normal(ks[1], shape_prefix + (mc.d_conv, di))
+                   * mc.d_conv ** -0.5).astype(pd),
+        "conv_b": jnp.zeros(shape_prefix + (di,), pd),
+        "x_proj": (jax.random.normal(ks[2], shape_prefix + (di, dtr + 2 * ds))
+                   * di ** -0.5).astype(pd),
+        "dt_proj": (jax.random.normal(ks[3], shape_prefix + (dtr, di))
+                    * dtr ** -0.5).astype(pd),
+        "dt_bias": jnp.full(shape_prefix + (di,), -4.6, pd),  # softplus ~ 0.01
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32)),
+            shape_prefix + (di, ds)).astype(pd),
+        "D": jnp.ones(shape_prefix + (di,), pd),
+        "out_proj": (jax.random.normal(ks[5], shape_prefix + (di, D))
+                     * di ** -0.5).astype(pd),
+    }
+
+
+def _ssm_inputs(cfg: ModelConfig, p, x1):
+    """x1: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    mc = cfg.mamba
+    ds, dtr = mc.d_state, cfg.dt_rank
+    cd = cfg.dtype("compute")
+    xdb = jnp.einsum("...i,ij->...j", x1.astype(cd), p["x_proj"].astype(cd))
+    dt, Bp, Cp = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt, p["dt_proj"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return dt, Bp.astype(jnp.float32), Cp.astype(jnp.float32)
+
+
+def _mamba_core(cfg: ModelConfig, p, x):
+    mc = cfg.mamba
+    di = cfg.d_inner
+    cd = cfg.dtype("compute")
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    x1_raw, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv over time
+    xpad = jnp.pad(x1_raw, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    x1 = sum(xpad[:, i:i + S, :] * p["conv_w"][i].astype(cd)
+             for i in range(mc.d_conv)) + p["conv_b"].astype(cd)
+    x1 = jax.nn.silu(x1)
+    dt, Bp, Cp = _ssm_inputs(cfg, p, x1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di, ds)
+    x1f = x1.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                            # (B,di),(B,di),(B,ds),(B,ds)
+        dA = jnp.exp(dt_t[..., None] * A[None])              # (B,di,ds)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]      # (B,di,ds)
+        h = dA * h + dBx
+        y = jnp.einsum("bis,bs->bi", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, mc.d_state), jnp.float32)
+    xs = (x1f.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bp.transpose(1, 0, 2), Cp.transpose(1, 0, 2))
+    h_final, ys = lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + x1f * p["D"].astype(jnp.float32)
+    y = (y.astype(cd) * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    return out, x1_raw, h_final
+
+
+def mamba_forward(cfg: ModelConfig, p, x) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    return _mamba_core(cfg, p, x)[0]
+
+
+def mamba_forward_with_cache(cfg: ModelConfig, p, x):
+    """Forward + decode cache (conv tail of raw in-proj acts, final h)."""
+    mc = cfg.mamba
+    out, x1_raw, h_final = _mamba_core(cfg, p, x)
+    tail = x1_raw[:, x.shape[1] - (mc.d_conv - 1):, :]
+    return out, {"conv": tail, "ssm": h_final}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token)
+# ---------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None):
+    mc = cfg.mamba
+    dt = dtype or cfg.dtype("compute")
+    return {"conv": jnp.zeros((batch, mc.d_conv - 1, cfg.d_inner), dt),
+            "ssm": jnp.zeros((batch, cfg.d_inner, mc.d_state), jnp.float32)}
+
+
+def mamba_step(cfg: ModelConfig, p, x, cache) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, D); cache {'conv': (B, d_conv-1, di), 'ssm': (B, di, ds)}."""
+    mc = cfg.mamba
+    cd = cfg.dtype("compute")
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    x1, z = jnp.split(xz[:, 0], 2, axis=-1)                  # (B, di)
+    window = jnp.concatenate([cache["conv"], x1[:, None, :]], axis=1)
+    new_conv = window[:, 1:, :]
+    x1 = sum(window[:, i, :] * p["conv_w"][i].astype(cd)
+             for i in range(mc.d_conv)) + p["conv_b"].astype(cd)
+    x1 = jax.nn.silu(x1)
+    dt, Bp, Cp = _ssm_inputs(cfg, p, x1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None] * A[None])
+    dBx = (dt * x1.astype(jnp.float32))[..., None] * Bp[:, None, :]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bis,bs->bi", h, Cp) + x1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(cd))[:, None, :]
+    return out, {"conv": new_conv, "ssm": h}

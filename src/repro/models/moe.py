@@ -1,0 +1,125 @@
+"""GShard-style top-k MoE with capacity-factor dispatch.
+
+Einsum-based dense dispatch (the pjit-native formulation): tokens are
+grouped (group axis = the data-parallel shards), each group computes
+its own expert capacity, and the two dispatch/combine einsums bracket
+the expert FFN whose expert axis is sharded over 'model' (EP) when
+divisible — pjit inserts the all-to-alls.  Aux load-balancing loss per
+GShard/Switch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import init_ffn
+
+
+def init_moe(cfg: ModelConfig, key, shape_prefix=()):
+    assert cfg.moe is not None
+    E = cfg.moe.n_experts
+    pd = cfg.dtype("param")
+    k_r, k_e = jax.random.split(key)
+    router = (jax.random.normal(k_r, shape_prefix + (cfg.d_model, E))
+              * cfg.d_model ** -0.5).astype(pd)
+    experts = init_ffn(cfg, k_e, shape_prefix=shape_prefix + (E,))
+    return {"router": router, "experts": experts}
+
+
+def _expert_ffn(cfg: ModelConfig, p, x):
+    """x: (G, E, C, D); expert-stacked weights (E, D, F)."""
+    cd = cfg.dtype("compute")
+    x = x.astype(cd)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("gecd,edf->gecf", x, p["w_gate"].astype(cd))
+        u = jnp.einsum("gecd,edf->gecf", x, p["w_up"].astype(cd))
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(g) * u
+    else:
+        h = jnp.einsum("gecd,edf->gecf", x, p["w_in"].astype(cd))
+        h = (jax.nn.gelu(h) if cfg.activation == "gelu"
+             else jnp.square(jax.nn.relu(h)))
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cd))
+
+
+def _top_k_gating(logits, k: int):
+    """Iterative top-1 x k (GShard): returns per-slot (index, prob)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (G, N, E)
+    masked = probs
+    idxs, gates = [], []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                          # (G, N)
+        gate = jnp.take_along_axis(masked, idx[..., None], axis=-1)[..., 0]
+        idxs.append(idx)
+        gates.append(gate)
+        masked = masked * (1.0 - jax.nn.one_hot(idx, probs.shape[-1],
+                                                dtype=probs.dtype))
+    idx = jnp.stack(idxs, axis=-1)            # (G, N, k)
+    gate = jnp.stack(gates, axis=-1)          # (G, N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return idx, gate, probs
+
+
+def apply_moe(cfg: ModelConfig, p, x, *, num_groups: int = 1
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Groups = data shards: capacity is computed per group so dispatch is
+    local until the expert all-to-all.
+    """
+    mc = cfg.moe
+    E, K = mc.n_experts, mc.top_k
+    B, S, D = x.shape
+    N = B * S
+    G = num_groups if N % num_groups == 0 else 1
+    Ng = N // G
+    cap = max(int(mc.capacity_factor * K * Ng / E), 1)
+    xg = x.reshape(G, Ng, D)
+    cd = cfg.dtype("compute")
+
+    logits = jnp.einsum("gnd,de->gne", xg.astype(cd), p["router"].astype(cd))
+    idx, gate, probs = _top_k_gating(logits, K)                  # (G,N,k)
+
+    # Aux load-balance loss (Switch): E * sum(frac_tokens * frac_prob).
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=1)
+    ce = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # Capacity assignment: position of each (token, slot) within its expert.
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (G,N,k,E)
+    flat = onehot.reshape(G, Ng * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G,N*k,E)
+    pos = jnp.einsum("gme,gme->gm", pos, flat).reshape(G, Ng, K)
+    pos = pos.astype(jnp.int32)
+    keep = pos < cap
+    gate = gate * keep
+
+    if cfg.moe_dispatch == "scatter":
+        # Indexed dispatch: scatter-add tokens into their (expert, slot)
+        # and gather back — zero E*C one-hot traffic/FLOPs (the einsum
+        # formulation is O(N·E·C·D); this is O(N·k·D)).  §Perf knob.
+        gi = jnp.arange(G)[:, None, None]                        # (G,1,1)
+        pos_c = jnp.minimum(pos, cap - 1)                        # (G,N,k)
+        contrib = (xg[:, :, None, :] * keep[..., None]).astype(cd)
+        expert_in = jnp.zeros((G, E, cap, D), cd)
+        expert_in = expert_in.at[gi, idx, pos_c].add(contrib)
+        expert_out = _expert_ffn(cfg, p["experts"], expert_in)   # (G,E,C,D)
+        back = expert_out[gi, idx, pos_c]                        # (G,N,k,D)
+        out = jnp.einsum("gnkd,gnk->gnd", back, gate.astype(cd))
+    else:
+        # GShard dense dispatch: (G,N,k,E/cap) one-hot contractions;
+        # contract keeping (E, cap) as output axes only.
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=cd) * keep[..., None]  # (G,N,k,cap)
+        disp = jnp.einsum("gnke,gnkc->gnec", onehot.astype(cd), pos_oh)
+        expert_in = jnp.einsum("gnec,gnd->gecd", disp, xg.astype(cd))
+
+        # Expert FFN: expert axis 'e' sharded (EP) when divisible.
+        expert_out = _expert_ffn(cfg, p["experts"], expert_in)   # (G,E,C,D)
+
+        comb = jnp.einsum("gnke,gnkc,gnk->gnec", onehot.astype(cd), pos_oh,
+                          gate.astype(cd))
+        out = jnp.einsum("gnec,gecd->gnd", comb, expert_out)
+    return out.reshape(B, S, D).astype(x.dtype), aux.astype(jnp.float32)

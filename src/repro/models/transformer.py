@@ -1,0 +1,338 @@
+"""Decoder-only stack covering dense / MoE / hybrid (mamba) / ssm (rwkv).
+
+Layers are grouped into a repeating *period* P (1 for homogeneous
+stacks; 8 for jamba's 1-attn:7-mamba; lcm with moe_every for MoE
+alternation) and the stack runs as ``lax.scan`` over n_layers/P groups
+— one compiled group body regardless of depth, which keeps both compile
+time and HLO size flat for the 512-device dry-run.
+
+Three public step graphs (what dryrun.py lowers):
+  loss_and_aux  — train forward (+xent, +MoE aux)
+  prefill       — forward returning per-layer caches + last-pos logits
+  decode_step   — one token through cached layers
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.blocks import (apply_ffn, apply_norm, embed_tokens,
+                                 init_embed, init_ffn, init_norm, lm_logits,
+                                 softmax_xent)
+from repro.models.moe import apply_moe, init_moe
+
+
+# ---------------------------------------------------------------------------
+# Layer layout
+# ---------------------------------------------------------------------------
+def block_period(cfg: ModelConfig) -> int:
+    p = cfg.attn_every if cfg.attn_every > 1 else 1
+    if cfg.moe:
+        p = math.lcm(p, cfg.moe.moe_every)
+    return p
+
+
+def period_pattern(cfg: ModelConfig):
+    """[(kind, use_moe)] for one period of the stack."""
+    p = block_period(cfg)
+    kinds = cfg.attn_layout[:p]
+    out = []
+    for i, kind in enumerate(kinds):
+        use_moe = bool(cfg.moe) and (i % cfg.moe.moe_every == 0) and kind != "rwkv"
+        out.append((kind, use_moe))
+    return out
+
+
+def moe_num_groups(n_tokens: int) -> int:
+    if n_tokens >= 16_384:
+        return n_tokens // 1_024
+    if n_tokens >= 16 and n_tokens % 16 == 0:
+        return 16
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_sub(cfg: ModelConfig, key, kind: str, use_moe: bool, prefix):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg, prefix)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attn(cfg, ks[0], prefix)
+    elif kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(cfg, ks[0], prefix)
+    else:  # rwkv
+        p["rwkv_tm"] = rwkv_mod.init_rwkv_tm(cfg, ks[0], prefix)
+    p["ln2"] = init_norm(cfg, prefix)
+    if kind == "rwkv":
+        p["rwkv_cm"] = rwkv_mod.init_rwkv_cm(cfg, ks[1], prefix)
+    elif use_moe:
+        p["moe"] = init_moe(cfg, ks[1], prefix)
+    else:
+        p["ffn"] = init_ffn(cfg, ks[1], prefix)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    period = period_pattern(cfg)
+    n_groups = cfg.n_layers // len(period)
+    assert cfg.n_layers % len(period) == 0, (cfg.n_layers, len(period))
+    k_embed, k_blocks, k_final = jax.random.split(key, 3)
+    sub_keys = jax.random.split(k_blocks, len(period))
+    params = init_embed(cfg, k_embed)
+    params["blocks"] = {
+        f"sub{i}": _init_sub(cfg, sub_keys[i], kind, use_moe, (n_groups,))
+        for i, (kind, use_moe) in enumerate(period)}
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+def init_params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _sinusoidal(cfg: ModelConfig, positions):
+    D = cfg.d_model
+    inv = 1.0 / (10_000 ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(cfg.dtype("compute"))
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(cfg.dtype("compute"))
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(cfg, params, tokens)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, positions)
+    return x, positions
+
+
+def _apply_sub(cfg: ModelConfig, p, x, positions, kind: str, use_moe: bool,
+               collect_cache: bool, causal: bool = True):
+    """One sub-block. Returns (x, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["ln1"], x)
+    cache = {}
+    if kind == "attn":
+        out, (k, v) = attn_mod.attn_block(cfg, p["attn"], h, positions,
+                                          causal=causal)
+        if collect_cache:
+            cache = {"k": k.astype(cfg.dtype("compute")),
+                     "v": v.astype(cfg.dtype("compute"))}
+    elif kind == "mamba":
+        if collect_cache:
+            out, cache = mamba_mod.mamba_forward_with_cache(cfg, p["mamba"], h)
+        else:
+            out = mamba_mod.mamba_forward(cfg, p["mamba"], h)
+    else:  # rwkv
+        B = x.shape[0]
+        st = rwkv_mod.init_rwkv_state(cfg, B)
+        out, _, state = rwkv_mod.rwkv_time_mix(cfg, p["rwkv_tm"], h,
+                                               st["tm_x"], st["state"])
+        if collect_cache:
+            cache["tm_x"] = h[:, -1, :]
+            cache["state"] = state
+    x = x + out.astype(x.dtype)
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if kind == "rwkv":
+        B = x.shape[0]
+        out2, _ = rwkv_mod.rwkv_channel_mix(
+            cfg, p["rwkv_cm"], h2, jnp.zeros((B, cfg.d_model), h2.dtype))
+        if collect_cache:
+            cache["cm_x"] = h2[:, -1, :]
+    elif use_moe:
+        n_tokens = x.shape[0] * x.shape[1]
+        out2, aux = apply_moe(cfg, p["moe"], h2,
+                              num_groups=moe_num_groups(n_tokens))
+    else:
+        out2 = apply_ffn(cfg, p["ffn"], h2)
+    x = x + out2.astype(x.dtype)
+    return x, aux, cache
+
+
+def forward(cfg: ModelConfig, params, batch, *, collect_cache: bool = False,
+            causal: bool = True):
+    """Returns (hidden (B,S,D), aux_loss, caches | None)."""
+    period = period_pattern(cfg)
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, (kind, use_moe) in enumerate(period):
+            x, a, cache = _apply_sub(cfg, gp[f"sub{i}"], x, positions, kind,
+                                     use_moe, collect_cache, causal)
+            aux = aux + a
+            caches[f"sub{i}"] = cache
+        return (x, aux), caches
+
+    if cfg.remat in ("block", "block_dots"):
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "block"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        group_body = jax.checkpoint(group_body, policy=policy)
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), caches = lax.scan(group_body, carry, params["blocks"])
+    else:  # unrolled (cost-calibration graphs; also small models)
+        n_groups = cfg.n_layers // len(period)
+        cache_list = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda t: t[g], params["blocks"])
+            carry, cache_g = group_body(carry, gp)
+            cache_list.append(cache_g)
+        (x, aux) = carry
+        caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *cache_list)
+                  if collect_cache else None)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, aux, (caches if collect_cache else None)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x, aux, _ = forward(cfg, params, batch)
+    logits = lm_logits(cfg, params, x)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params, batch, *, pad_to: Optional[int] = None):
+    """Run the prompt; return (last_logits, caches, next_pos).
+
+    ``pad_to``: allocate attention KV caches at this length (>= S) so
+    decode can append in place.
+    """
+    x, _, caches = forward(cfg, params, batch, collect_cache=True)
+    last = x[:, -1:, :]
+    logits = lm_logits(cfg, params, last)[:, 0]
+    S = (batch["embeds"] if cfg.embed_inputs else batch["tokens"]).shape[1]
+    if pad_to and pad_to > S:
+        pad = pad_to - S
+
+        def grow(path_leaf):
+            return path_leaf
+
+        def pad_kv(c):
+            out = dict(c)
+            for key in ("k", "v"):
+                if key in c:
+                    arr = c[key]  # (G, B, S, Hkv, Dh)
+                    out[key] = jnp.pad(arr, ((0, 0), (0, 0), (0, pad),
+                                             (0, 0), (0, 0)))
+            return out
+
+        caches = {name: pad_kv(c) for name, c in caches.items()}
+    return logits, caches, S
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
+    """One token step. tokens: (B, 1) (or embeds (B,1,D)); pos: scalar int32.
+
+    caches: pytree with leading group axis (as produced by prefill or
+    ``init_decode_caches``).  Returns (logits (B, V), new_caches).
+    """
+    period = period_pattern(cfg)
+    batch = ({"embeds": tokens} if cfg.embed_inputs and tokens.ndim == 3
+             else {"tokens": tokens})
+    B = tokens.shape[0]
+    x = (batch["embeds"].astype(cfg.dtype("compute"))
+         if "embeds" in batch else embed_tokens(cfg, params, batch["tokens"]))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(cfg, attn_mod.positions_b1(pos, B))
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        new_cache = {}
+        for i, (kind, use_moe) in enumerate(period):
+            p = gp[f"sub{i}"]
+            c = gcache[f"sub{i}"]
+            h = apply_norm(cfg, p["ln1"], x)
+            nc = {}
+            if kind == "attn":
+                out, ck, cv = attn_mod.decode_attn(cfg, p["attn"], h,
+                                                   c["k"], c["v"], pos)
+                nc = {"k": ck, "v": cv}
+            elif kind == "mamba":
+                out, nc = mamba_mod.mamba_step(cfg, p["mamba"], h, c)
+            else:  # rwkv
+                out, _, state = rwkv_mod.rwkv_time_mix(
+                    cfg, p["rwkv_tm"], h, c["tm_x"], c["state"])
+                nc = {"tm_x": h[:, -1, :], "state": state}
+            x = x + out.astype(x.dtype)
+            h2 = apply_norm(cfg, p["ln2"], x)
+            if kind == "rwkv":
+                out2, _ = rwkv_mod.rwkv_channel_mix(cfg, p["rwkv_cm"], h2,
+                                                    c["cm_x"])
+                nc["cm_x"] = h2[:, -1, :]
+            elif use_moe:
+                out2, _ = apply_moe(cfg, p["moe"], h2,
+                                    num_groups=moe_num_groups(B))
+            else:
+                out2 = apply_ffn(cfg, p["ffn"], h2)
+            x = x + out2.astype(x.dtype)
+            new_cache[f"sub{i}"] = nc
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_caches = lax.scan(group_body, x, (params["blocks"], caches))
+    else:
+        n_groups = cfg.n_layers // len(period)
+        outs = []
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda t: t[g], params["blocks"])
+            gc = jax.tree.map(lambda t: t[g], caches)
+            x, nc = group_body(x, (gp, gc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Zero caches with leading group axis (for decode-only dry-runs)."""
+    period = period_pattern(cfg)
+    n_groups = cfg.n_layers // len(period)
+    cd = cfg.dtype("compute")
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def one(kind):
+        if kind == "attn":
+            shape = (n_groups, batch, max_len, Hkv, Dh)
+            return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+        if kind == "mamba":
+            mc = cfg.mamba
+            return {"conv": jnp.zeros((n_groups, batch, mc.d_conv - 1,
+                                       cfg.d_inner), cd),
+                    "ssm": jnp.zeros((n_groups, batch, cfg.d_inner,
+                                      mc.d_state), jnp.float32)}
+        H, hs = cfg.d_model // cfg.rwkv.head_size, cfg.rwkv.head_size
+        return {"tm_x": jnp.zeros((n_groups, batch, cfg.d_model), cd),
+                "cm_x": jnp.zeros((n_groups, batch, cfg.d_model), cd),
+                "state": jnp.zeros((n_groups, batch, H, hs, hs), jnp.float32)}
+
+    return {f"sub{i}": one(kind)
+            for i, (kind, _) in enumerate(period_pattern(cfg))}

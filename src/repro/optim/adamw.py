@@ -1,0 +1,90 @@
+"""AdamW with configurable moment dtype (bf16 moments for the >100B
+archs — the large-scale memory policy recorded in DESIGN.md) + global
+grad-norm clipping + linear-warmup cosine schedule.
+
+Functional, pytree-shaped like the params: opt state shards exactly as
+the params do under pjit (ZeRO-1-equivalent for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> OptState:
+    md = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jnp.zeros_like(p, dtype=md)
+    return OptState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState
+                  ) -> Tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m32.astype(md), v32.astype(md)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(new_mu, new_nu, step), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,92 @@
+"""autotune + quantize modules: feasibility, alignment, error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autotune import (autotune_conv, autotune_flash,
+                                 autotune_matmul)
+from repro.core.quantize import (int8_matmul, quantization_error,
+                                 quantize_acts, quantize_weights)
+from repro.core.resources import MXU_DIM, ResourceBudget
+
+
+# --------------------------------------------------------------------------
+# autotune
+# --------------------------------------------------------------------------
+def test_autotune_matmul_alignment_and_fit():
+    r = autotune_matmul(1024, 4096, 1024)
+    for key in ("bm", "bn", "bk"):
+        assert r.params[key] % MXU_DIM == 0
+    assert r.footprint.fits(ResourceBudget())
+
+
+def test_autotune_matmul_respects_tight_vmem():
+    tight = ResourceBudget(vmem_bytes=2 * 2**20)
+    r = autotune_matmul(2048, 2048, 2048, budget=tight)
+    assert r.footprint.vmem_bytes <= tight.vmem_bytes
+    ample = autotune_matmul(2048, 2048, 2048)
+    assert r.footprint.vmem_bytes <= ample.footprint.vmem_bytes
+
+
+def test_autotune_flash_and_conv():
+    r = autotune_flash(8, 32, 8, 4096, 4096, 128)
+    assert r.params["bq"] >= 128 and r.params["bk"] >= 128
+    assert r.footprint.fits(ResourceBudget())
+    c = autotune_conv(4, 64, 64, 16, 3, 3, 256)
+    assert c.params["block_cout"] % 128 == 0
+
+
+def test_autotune_measured_agrees_with_feasible():
+    r = autotune_matmul(256, 256, 256, measure=True)
+    assert r.measured_us is not None and r.measured_us > 0
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+def test_weight_quantization_error_small(rng):
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    assert quantization_error(w) < 0.01
+
+
+def test_int8_matmul_close_to_f32(rng):
+    x = jnp.asarray(rng.normal(size=(4, 64, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    wq = quantize_weights(w)
+    y_q = int8_matmul(x, wq)
+    y_f = jnp.einsum("...k,kn->...n", x, w)
+    # w8a8 keeps ~1% relative error on gaussian data
+    rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
+    assert rel < 0.02, rel
+
+
+def test_int8_matmul_kernel_path_matches_jnp(rng):
+    x = jnp.asarray(rng.normal(size=(32, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(96, 48)).astype(np.float32))
+    wq = quantize_weights(w)
+    y1 = int8_matmul(x, wq, use_kernel=False)
+    y2 = int8_matmul(x, wq, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ch=st.integers(1, 64))
+def test_quantize_roundtrip_bounded(seed, ch):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(16, ch)).astype(np.float32))
+    wq = quantize_weights(w)
+    deq = wq.q.astype(jnp.float32) * wq.scale
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    # error bounded by half a quantization step per channel
+    bound = np.asarray(wq.scale)[0] * 0.5 + 1e-6
+    assert (err <= bound + 1e-6).all()
+
+
+def test_quantize_acts_range(rng):
+    x = jnp.asarray(rng.normal(size=(100,)).astype(np.float32) * 50)
+    q = quantize_acts(x)
+    assert q.q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.q))) <= 127

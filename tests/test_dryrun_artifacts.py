@@ -1,0 +1,88 @@
+"""Regression locks on the committed dry-run artifacts.
+
+These read `experiments/dryrun/*.json` (produced by
+`python -m repro.launch.dryrun`); skipped when absent so the suite
+stays runnable on a fresh checkout.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not DRYRUN.exists() or not list(DRYRUN.glob("*.json")),
+    reason="dry-run artifacts not generated")
+
+
+def _load(name):
+    f = DRYRUN / f"{name}.json"
+    if not f.exists():
+        pytest.skip(f"{name} not generated")
+    return json.loads(f.read_text())
+
+
+def test_all_cells_ok_or_skipped():
+    statuses = {}
+    for f in DRYRUN.glob("*.json"):
+        r = json.loads(f.read_text())
+        statuses[r["cell"]] = r["status"]
+    assert statuses, "no cells"
+    bad = {c: s for c, s in statuses.items() if s == "error"}
+    assert not bad, bad
+
+
+def test_skips_are_exactly_long500k_full_attention():
+    skipped = []
+    for f in DRYRUN.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            skipped.append((r["arch"], r["shape"]))
+            assert r["shape"] == "long_500k", r["cell"]
+    subq = {"rwkv6-3b", "jamba-1.5-large-398b"}
+    assert not any(a in subq for a, _ in skipped)
+
+
+def test_memory_fits_hbm_budget():
+    """Every compiled cell's static bytes/device must fit 16 GiB."""
+    for f in DRYRUN.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r["status"] != "ok":
+            continue
+        assert r["static_bytes_per_device"] < 16 * 2**30, r["cell"]
+
+
+def test_multi_pod_halves_fsdp_state():
+    s = _load("grok-1-314b__train_4k__single")
+    m = _load("grok-1-314b__train_4k__multi")
+    if s["status"] != "ok" or m["status"] != "ok":
+        pytest.skip("cells missing")
+    ratio = s["static_bytes_per_device"] / m["static_bytes_per_device"]
+    assert 1.8 < ratio < 2.2, ratio  # pod axis doubles the dp shards
+
+
+def test_hillclimb_improvements_locked():
+    """The §Perf opt variants must beat their baselines."""
+    for arch, shape, min_gain in [
+            ("olmo-1b", "train_4k", 1.15),
+            ("grok-1-314b", "train_4k", 1.3),
+            ("llava-next-34b", "prefill_32k", 10.0)]:
+        base = _load(f"{arch}__{shape}__single")
+        opt = _load(f"{arch}__{shape}__single__opt")
+        if base["status"] != "ok" or opt["status"] != "ok":
+            pytest.skip("cells missing")
+        gain = (opt["roofline"]["roofline_fraction"]
+                / base["roofline"]["roofline_fraction"])
+        assert gain >= min_gain, (arch, shape, gain)
+
+
+def test_calibration_sane():
+    """Calibrated totals must exceed the raw scan-graph numbers by
+    roughly the group count (the while-body undercount)."""
+    r = _load("olmo-1b__train_4k__single")
+    if r["status"] != "ok":
+        pytest.skip()
+    g = r["calibration"]["n_groups"]
+    ratio = r["totals_per_device"]["flops"] / r["scan_graph"]["flops"]
+    assert g * 0.3 < ratio < g * 2.5, (ratio, g)

@@ -1,0 +1,129 @@
+"""End-to-end integration: training convergence, failure->restart
+resume equivalence, batched serving, analysis utilities."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(args, timeout=600, check=True):
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if check:
+        assert out.returncode == 0, \
+            f"rc={out.returncode}\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out
+
+
+def test_train_loss_decreases(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "llama3.2-1b", "--smoke",
+                "--steps", "30", "--batch", "8", "--seq", "64",
+                "--lr", "1e-2", "--ckpt-dir", str(tmp_path / "ck")])
+    lines = [l for l in out.stdout.splitlines() if "loss" in l and "step" in l]
+    first = float(lines[0].split("loss")[1].split()[0])
+    last = float(lines[-1].split("loss")[1].split()[0])
+    assert last < first - 0.5, out.stdout
+
+
+def test_failure_restart_resumes_exactly(tmp_path):
+    """Crash at step 25, relaunch: the resumed run must continue from
+    the checkpoint and finish; the data pipeline skips ahead so no batch
+    is consumed twice."""
+    ck = str(tmp_path / "ck")
+    common = ["repro.launch.train", "--arch", "olmo-1b", "--smoke",
+              "--steps", "40", "--batch", "4", "--seq", "32",
+              "--ckpt-every", "10", "--ckpt-dir", ck]
+    out1 = _run(common + ["--simulate-failure", "25"], check=False)
+    assert out1.returncode == 17, out1.stdout + out1.stderr
+    assert "FAILURE" in out1.stdout
+    out2 = _run(common)
+    assert "restored step" in out2.stdout
+    assert "resuming at 21" in out2.stdout, out2.stdout
+    assert "done" in out2.stdout
+
+
+def test_uninterrupted_equals_restarted(tmp_path):
+    """Gold run (no failure) and crash+resume run reach the SAME final
+    loss — checkpoint + deterministic data = exact resume."""
+    ck_a = str(tmp_path / "a")
+    ck_b = str(tmp_path / "b")
+    base = ["repro.launch.train", "--arch", "llama3.2-1b", "--smoke",
+            "--steps", "24", "--batch", "4", "--seq", "32",
+            "--ckpt-every", "8"]
+    gold = _run(base + ["--ckpt-dir", ck_a])
+    _run(base + ["--ckpt-dir", ck_b, "--simulate-failure", "18"],
+         check=False)
+    resumed = _run(base + ["--ckpt-dir", ck_b])
+
+    def final_loss(stdout):
+        lines = [l for l in stdout.splitlines()
+                 if l.startswith("[train] step")]
+        return float(lines[-1].split("loss")[1].split()[0])
+
+    # resumed must land within float-accumulation noise of gold
+    assert abs(final_loss(gold.stdout) - final_loss(resumed.stdout)) < 2e-2, \
+        (gold.stdout, resumed.stdout)
+
+
+def test_serve_batched_requests():
+    out = _run(["repro.launch.serve", "--arch", "llama3.2-1b", "--smoke",
+                "--requests", "6", "--slots", "2", "--max-new", "6",
+                "--prompt-len", "8", "--max-len", "24"])
+    assert "6 requests" in out.stdout
+    assert "36 tokens" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# Analysis utilities (pure python — no subprocess needed)
+# --------------------------------------------------------------------------
+def test_collective_parser():
+    from repro.launch.analysis import collective_bytes
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[8,64]{1,0} all-gather(f32[2,64]{1,0} %y), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = bf16[16,16]{1,0} reduce-scatter(bf16[64,16]{1,0} %z), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %cp = f32[4]{0} collective-permute(f32[4]{0} %w), source_target_pairs={{0,1}}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 8 * 64 * 4 / 4      # result / group 4
+    assert out["reduce-scatter"] == 16 * 16 * 2 * 4  # result * group 4
+    assert out["collective-permute"] == 16
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms():
+    from repro.launch.analysis import Roofline
+    r = Roofline(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                 coll_bytes=50e9 * 4 * 256, chips=256,
+                 model_flops=197e12 * 256 * 0.5,
+                 min_hbm_bytes=819e9 * 256 * 0.25,
+                 min_coll_bytes=0)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert r.dominant in ("compute", "memory", "collective")
+    assert 0 < r.roofline_fraction <= 1.0
+
+
+def test_ideal_traffic_sane():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.launch.analysis import ideal_traffic, model_flops
+    for arch in ("olmo-1b", "dbrx-132b", "rwkv6-3b"):
+        cfg = get_config(arch)
+        for shape in ("train_4k", "decode_32k"):
+            hbm, coll = ideal_traffic(cfg, SHAPES[shape], dp=16, tp=16,
+                                      chips=256, fsdp=cfg.fsdp)
+            assert hbm > 0 and coll >= 0
+            assert model_flops(cfg, SHAPES[shape]) > 0

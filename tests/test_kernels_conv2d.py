@@ -1,0 +1,97 @@
+"""conv2d IP family vs the pure-jnp oracle: shape/dtype sweeps +
+bit-exactness of the Conv3 packing trick (the paper's core mechanism)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.conv2d.ops import conv2d, conv2d_dual
+from repro.kernels.conv2d.ref import conv2d_dual_ref, conv2d_ref
+
+SHAPES = [  # (N, H, W, Cin, KH, KW, Cout)
+    (1, 8, 8, 1, 3, 3, 1),
+    (2, 12, 12, 3, 3, 3, 8),
+    (1, 16, 9, 4, 5, 3, 16),
+    (3, 7, 7, 2, 1, 1, 4),
+    (1, 10, 10, 8, 3, 3, 130),   # cout > one lane tile
+]
+
+
+def _int_data(rng, shape, dtype=np.int8):
+    lo, hi = (-128, 128) if dtype == np.int8 else (-32768, 32768)
+    return jnp.asarray(rng.integers(lo, hi, shape, dtype=dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("ip", ["ip1_vpu", "ip2_mxu"])
+def test_single_stream_int8_exact(rng, shape, ip):
+    n, h, w, cin, kh, kw, cout = shape
+    x = _int_data(rng, (n, h, w, cin))
+    wgt = _int_data(rng, (kh, kw, cin, cout))
+    out = conv2d(x, wgt, ip=ip)
+    ref = conv2d_ref(x, wgt)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("ip", ["ip3_packed", "ip4_dual"])
+def test_dual_stream_int8_exact(rng, shape, ip):
+    n, h, w, cin, kh, kw, cout = shape
+    xa = _int_data(rng, (n, h, w, cin))
+    xb = _int_data(rng, (n, h, w, cin))
+    wgt = _int_data(rng, (kh, kw, cin, cout))
+    ya, yb = conv2d_dual(xa, xb, wgt, ip=ip)
+    ra, rb = conv2d_dual_ref(xa, xb, wgt)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(rb))
+
+
+@pytest.mark.parametrize("ip", ["ip1_vpu", "ip2_mxu"])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_single_stream_float(rng, ip, dtype):
+    x = jnp.asarray(rng.normal(size=(2, 10, 10, 4)).astype(dtype))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(dtype))
+    out = conv2d(x, w, ip=ip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(conv2d_ref(x, w)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ip3_rejects_wide_operands(rng):
+    xa = jnp.asarray(rng.integers(-100, 100, (1, 6, 6, 2), dtype=np.int16))
+    w = jnp.asarray(rng.integers(-100, 100, (3, 3, 2, 2), dtype=np.int8))
+    with pytest.raises(TypeError, match="8-bit"):
+        conv2d_dual(xa, xa, w, ip="ip3_packed")
+
+
+# --------------------------------------------------------------------------
+# Property: the packing identity is exact for ALL int8 operand values,
+# including the sign-borrow corner cases (the paper's Conv3 contract).
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       h=st.integers(3, 8), cin=st.integers(1, 3), cout=st.integers(1, 4))
+def test_ip3_packing_exact_property(seed, h, cin, cout):
+    rng = np.random.default_rng(seed)
+    xa = jnp.asarray(rng.integers(-128, 128, (1, h, h, cin), dtype=np.int8))
+    xb = jnp.asarray(rng.integers(-128, 128, (1, h, h, cin), dtype=np.int8))
+    w = jnp.asarray(rng.integers(-128, 128, (3, 3, cin, cout), dtype=np.int8))
+    if h < 3:
+        return
+    ya, yb = conv2d_dual(xa, xb, w, ip="ip3_packed")
+    ra, rb = conv2d_dual_ref(xa, xb, w)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(rb))
+
+
+def test_ip3_extreme_values():
+    """-128 * -128 and friends: the borrow correction must be exact."""
+    for a_val, b_val, w_val in [(-128, -128, -128), (-128, 127, -128),
+                                (127, -128, 127), (127, 127, 127),
+                                (-1, 1, -1), (0, -128, 127)]:
+        xa = jnp.full((1, 3, 3, 1), a_val, jnp.int8)
+        xb = jnp.full((1, 3, 3, 1), b_val, jnp.int8)
+        w = jnp.full((3, 3, 1, 1), w_val, jnp.int8)
+        ya, yb = conv2d_dual(xa, xb, w, ip="ip3_packed")
+        assert int(ya[0, 0, 0, 0]) == 9 * a_val * w_val
+        assert int(yb[0, 0, 0, 0]) == 9 * b_val * w_val

@@ -1,0 +1,45 @@
+"""Pallas selective-scan vs the lax.scan oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.mamba_scan.scan import selective_scan
+
+CASES = [  # (B, T, Di, Ds, block_di)
+    (1, 8, 16, 4, 16),
+    (2, 16, 32, 8, 16),     # Di > block -> grid over di blocks
+    (2, 12, 24, 4, 8),
+]
+
+
+def _data(rng, b, t, di, ds):
+    x = jnp.asarray(rng.normal(size=(b, t, di)).astype(np.float32))
+    dt = jnp.asarray(0.1 * np.abs(rng.normal(size=(b, t, di))).astype(np.float32))
+    bp = jnp.asarray(rng.normal(size=(b, t, ds)).astype(np.float32))
+    cp = jnp.asarray(rng.normal(size=(b, t, ds)).astype(np.float32))
+    a = jnp.asarray(-np.abs(rng.normal(size=(di, ds))).astype(np.float32))
+    return x, dt, bp, cp, a
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_selective_scan_matches_ref(rng, case):
+    b, t, di, ds, bdi = case
+    x, dt, bp, cp, a = _data(rng, b, t, di, ds)
+    y_k, h_k = selective_scan(x, dt, bp, cp, a, block_di=bdi)
+    y_r, h_r = selective_scan_ref(x, dt, bp, cp, a)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_footprint_hbm_advantage():
+    """The kernel's HBM traffic must beat the scan twin's state
+    round-trips by ~Ds for long sequences."""
+    from repro.kernels.mamba_scan.scan import footprint
+    b, t, di, ds = 8, 4096, 4096, 16
+    fp = footprint(b, t, di, ds)
+    scan_twin_state_traffic = 2 * b * t * di * ds * 4  # h out+in per step
+    assert fp.hbm_bytes * 4 < scan_twin_state_traffic
+    assert fp.mxu_passes == 0  # Conv1-style logic-only member

@@ -1,0 +1,72 @@
+"""matmul IP family vs oracle: tile-shape sweeps, int8 exactness,
+shared-weight dual-stream contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul.ops import matmul, matmul_dual
+from repro.kernels.matmul.ref import matmul_dual_ref, matmul_ref
+
+SHAPES = [(8, 8, 8), (64, 96, 48), (100, 130, 70), (33, 17, 5),
+          (256, 512, 128)]
+TILES = [dict(bm=32, bn=32, bk=32), dict(bm=128, bn=128, bk=128)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("tiles", TILES)
+def test_mm_mxu_int8_exact(rng, shape, tiles):
+    m, k, n = shape
+    a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    out = matmul(a, b, ip="mm_mxu", **tiles)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(matmul_ref(a, b)))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:4])
+def test_mm_mxu_float(rng, shape):
+    m, k, n = shape
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    out = matmul(a, b, ip="mm_mxu", bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_mm_vpu_matches(rng, shape):
+    m, k, n = shape
+    a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(matmul(a, b, ip="mm_vpu")),
+                                  np.asarray(matmul_ref(a, b)))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:4])
+def test_mm_dual_shared_int8(rng, shape):
+    m, k, n = shape
+    a1 = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    a2 = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    y1, y2 = matmul_dual(a1, a2, b, ip="mm_dual_shared", bm=32, bn=32, bk=32)
+    e1, e2 = matmul_dual_ref(a1, a2, b)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(e1))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(e2))
+
+
+def test_mm_dual_shared_rejects_wide(rng):
+    a = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    with pytest.raises(TypeError, match="8-bit"):
+        matmul_dual(a, a, a, ip="mm_dual_shared")
+
+
+def test_mm_dual_full_float(rng):
+    a1 = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+    a2 = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(96, 48)).astype(np.float32))
+    y1, y2 = matmul_dual(a1, a2, b, ip="mm_dual_full", bm=32, bn=32, bk=32)
+    e1, e2 = matmul_dual_ref(a1, a2, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(e1), rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(e2), rtol=2e-4,
+                               atol=1e-5)

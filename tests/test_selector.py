@@ -1,0 +1,105 @@
+"""Resource-driven selector: feasibility + the paper's Table I logic,
+as properties over random budgets."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.library import ATTENTION, CONV2D, MATMUL, get_ip
+from repro.core.resources import Footprint, ResourceBudget
+from repro.core.selector import (select_attention_ip, select_conv_ip,
+                                 select_matmul_ip)
+
+CONV_SHAPE = ((2, 32, 32, 3), (3, 3, 3, 16))
+
+
+def test_no_mxu_budget_forces_conv1():
+    ip = select_conv_ip(*CONV_SHAPE, dual=False, dtype=jnp.int8,
+                        budget=ResourceBudget(mxu_available=False))
+    assert ip.name == "conv2d.ip1_vpu"
+
+
+def test_logic_starved_budget_forces_conv2():
+    """Tight VPU budget (paper: 'limited logic resources') -> DSP IP.
+    Budget admits ip2's im2col bookkeeping (~49K vector ops) but not
+    ip1's full multiply-accumulate load (~1.5M)."""
+    ip = select_conv_ip(*CONV_SHAPE, dual=False, dtype=jnp.int8,
+                        budget=ResourceBudget(vpu_ops_budget=100_000))
+    assert ip.name == "conv2d.ip2_mxu"
+
+
+def test_dual_int8_prefers_packed_under_mxu_pressure():
+    ip = select_conv_ip(*CONV_SHAPE, dual=True, dtype=jnp.int8,
+                        budget=ResourceBudget(precision_bits=8,
+                                              mxu_passes_budget=1))
+    assert ip.name == "conv2d.ip3_packed"
+
+
+def test_dual_wide_precision_forces_conv4():
+    """16-bit operands make Conv3 infeasible (paper Table I)."""
+    ip = select_conv_ip(*CONV_SHAPE, dual=True, dtype=jnp.int16,
+                        budget=ResourceBudget(precision_bits=16))
+    assert ip.name == "conv2d.ip4_dual"
+
+
+def test_matmul_defaults_to_mxu_at_scale():
+    ip = select_matmul_ip((512, 512), (512, 512), dual=False,
+                          dtype=jnp.bfloat16)
+    assert ip.name == "matmul.mm_mxu"
+
+
+def test_attention_decode_routing():
+    assert select_attention_ip((2, 16, 1, 128), (2, 4, 32768, 128)).name \
+        == "attention.attn_decode"
+    assert select_attention_ip((2, 16, 4096, 128), (2, 4, 4096, 128)).name \
+        == "attention.attn_flash"
+
+
+def test_infeasible_budget_raises():
+    with pytest.raises(ValueError, match="no feasible IP"):
+        select_conv_ip(*CONV_SHAPE, dual=True, dtype=jnp.int16,
+                       budget=ResourceBudget(precision_bits=16,
+                                             mxu_available=False))
+
+
+# --------------------------------------------------------------------------
+# Properties
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(vmem_mb=st.integers(1, 256), mxu=st.booleans(),
+       bits=st.sampled_from([8, 16]), parallel=st.booleans())
+def test_selection_always_feasible(vmem_mb, mxu, bits, parallel):
+    budget = ResourceBudget(vmem_bytes=vmem_mb * 2**20, mxu_available=mxu,
+                            precision_bits=bits,
+                            prefer_parallel_streams=parallel)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    for dual in (False, True):
+        try:
+            ip = select_conv_ip(*CONV_SHAPE, dual=dual, dtype=dtype,
+                                budget=budget)
+        except ValueError:
+            continue  # "no feasible IP" is an allowed outcome
+        n, h, w, cin = CONV_SHAPE[0]
+        kh, kw, _, cout = CONV_SHAPE[1]
+        fp = ip.footprint(n, h, w, cin, kh, kw, cout,
+                          itemsize=jnp.dtype(dtype).itemsize)
+        assert fp.fits(budget), (ip.name, fp, budget)
+        assert bits <= fp.max_operand_bits
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(16, 2048), k=st.integers(16, 2048),
+       n=st.integers(16, 2048))
+def test_matmul_selection_feasible(m, k, n):
+    ip = select_matmul_ip((m, k), (k, n), dual=False, dtype=jnp.bfloat16)
+    fp = ip.footprint(m, k, n, itemsize=2)
+    assert fp.fits(ResourceBudget())
+
+
+def test_library_registry_integrity():
+    for fam in (CONV2D, MATMUL, ATTENTION):
+        for ip in fam:
+            assert ip.name.startswith(fam.name + ".")
+            assert callable(ip.impl)
+    assert get_ip("conv2d.ip3_packed").max_operand_bits == 8
+    assert get_ip("conv2d.ip3_packed").outputs_per_pass == 2
+    assert get_ip("matmul.mm_vpu").uses_mxu is False
