@@ -1,0 +1,110 @@
+"""Adaptive CNN pipeline — the paper's future-work scenario closed:
+a full CNN layer stack (conv -> pool -> activation) where EVERY op is
+dispatched through the resource-driven selector under one budget.
+
+    PYTHONPATH=src python examples/cnn_pipeline.py
+
+Part 1 runs an int8 fixed-point CNN under three deployment budgets
+(ample / MXU-starved / VPU-starved): the selected IPs differ per budget,
+the outputs are bit-identical — adaptation changes the implementation,
+never the math.
+
+Part 2 shows the precision axis the activation family adds: under an
+8-bit-precision budget the selector swaps the exact transcendental for
+the fixed-point LUT IP, trading a bounded approximation error for ~4x
+fewer vector ops and 1-byte operand streaming.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resources import ResourceBudget
+from repro.core.selector import (describe_plan, select_activation_ip,
+                                 select_conv_ip, select_pool_ip)
+from repro.kernels.activation.ops import activation
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.pool2d.ops import pool2d
+
+LAYERS = [  # (cin, cout, kernel)
+    (8, 16, 3),
+    (16, 32, 3),
+    (32, 32, 3),
+]
+
+BUDGETS = {
+    "ample": ResourceBudget(),
+    "mxu_starved": ResourceBudget(mxu_available=False),
+    "vpu_starved": ResourceBudget(vpu_ops_budget=2_000_000),
+}
+
+
+def requantize(y):
+    return jnp.clip(y // 8, -128, 127).astype(jnp.int8)
+
+
+def run_stack(img, weights, budget):
+    """conv -> maxpool -> relu -> requant per layer, all selector-driven."""
+    plan = {}
+    x = img
+    for li, w in enumerate(weights):
+        ip, fp = select_conv_ip(x.shape, w.shape, dual=False, dtype=jnp.int8,
+                                budget=budget, with_footprint=True)
+        plan[f"layer{li}.conv"] = (ip, fp)
+        x = conv2d(x, w, ip=ip.name)
+        ip, fp = select_pool_ip(x.shape, window=(2, 2), mode="max",
+                                dtype=x.dtype, budget=budget,
+                                with_footprint=True)
+        plan[f"layer{li}.pool"] = (ip, fp)
+        x = pool2d(x, window=(2, 2), mode="max", ip=ip.name)
+        ip, fp = select_activation_ip(x.shape, kind="relu", dtype=x.dtype,
+                                      budget=budget, with_footprint=True)
+        plan[f"layer{li}.act"] = (ip, fp)
+        x = requantize(activation(x, kind="relu", ip=ip.name))
+    return x, plan
+
+
+def main():
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(-128, 128, (2, 40, 40, 8), dtype=np.int8))
+    weights = [jnp.asarray(rng.integers(-16, 16, (k, k, cin, cout),
+                                        dtype=np.int8))
+               for cin, cout, k in LAYERS]
+
+    results = {}
+    for bname, budget in BUDGETS.items():
+        out, plan = run_stack(img, weights, budget)
+        results[bname] = np.asarray(out)
+        print(f"\n=== budget: {bname} ===")
+        print(describe_plan(plan))
+        print(f"  output: {out.shape}, sum={int(np.asarray(out).sum())}")
+
+    base = results["ample"]
+    for bname, out in results.items():
+        assert np.array_equal(out, base), bname
+    print("\nall budgets produced IDENTICAL outputs — adaptation changed "
+          "the implementation, not the math. ✓")
+
+    # --- Part 2: the precision axis -------------------------------------
+    feats = jnp.asarray(rng.normal(0, 2, (2, 10, 10, 32)).astype(np.float32))
+    full = ResourceBudget(precision_bits=16)
+    low = ResourceBudget(precision_bits=8)
+    ip_full = select_activation_ip(feats.shape, kind="tanh", budget=full)
+    ip_low = select_activation_ip(feats.shape, kind="tanh", budget=low)
+    y_full = activation(feats, kind="tanh", ip=ip_full.name)
+    y_low = activation(feats, kind="tanh", ip=ip_low.name)
+    err = float(jnp.abs(y_full - y_low).max())
+    print(f"\ntanh head: precision>=16b -> {ip_full.name}, "
+          f"precision<=8b -> {ip_low.name}")
+    print(f"max |exact - lut| = {err:.4f} (bounded by the 256-level grid)")
+    assert ip_full.name == "activation.act_vpu"
+    assert ip_low.name == "activation.act_lut"
+    assert err < 0.05
+    print("precision-driven swap verified. ✓")
+
+
+if __name__ == "__main__":
+    main()

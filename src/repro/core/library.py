@@ -1,15 +1,24 @@
 """The adaptive IP library — paper Table I, machine-readable.
 
-Three families (conv2d is the paper's literal object; matmul and
-attention are its generalization to the assigned LM architectures).
-Every member carries the Table I capability bits and a footprint
-function pricing it against the TPU resource vector.
+Families: conv2d is the paper's literal object; pool2d and activation
+close its stated future work ("expand the library to include pooling
+and activation functions"); matmul, attention, and ssm_scan are its
+generalization to the assigned LM architectures.  Every member carries
+the Table I capability bits and a footprint function pricing it against
+the TPU resource vector.  The registration contract is documented in
+docs/adaptive_ips.md.
 """
 from __future__ import annotations
 
 from repro.core.ip import IPFamily, KernelIP
 from repro.kernels.conv2d import ip1_vpu, ip2_mxu, ip3_packed, ip4_dual
 from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.pool2d import mxu_im2col as pool_im2col_mod
+from repro.kernels.pool2d import vpu_window as pool_vpu_mod
+from repro.kernels.pool2d.ref import pool2d_ref
+from repro.kernels.activation import lut_poly as act_lut_mod
+from repro.kernels.activation import vpu_exact as act_exact_mod
+from repro.kernels.activation.ref import activation_ref
 from repro.kernels.matmul import dual as mm_dual
 from repro.kernels.matmul import mxu as mm_mxu_mod
 from repro.kernels.matmul.ref import matmul_ref
@@ -42,6 +51,46 @@ CONV2D.register(KernelIP(
     footprint_fn=ip4_dual.footprint, uses_mxu=True, max_operand_bits=32,
     outputs_per_pass=2, tags=("paper:Conv4", "dual-stream"),
     description="Two parallel convolutions via dual MXU passes; full precision."))
+
+# --------------------------------------------------------------------------
+# pool2d family — the paper's future-work coverage: same resource split as
+# Conv1/Conv2 (logic-only windowed reduce vs im2col + one MXU pass).
+# --------------------------------------------------------------------------
+POOL2D = IPFamily("pool2d", reference=pool2d_ref)
+POOL2D.register(KernelIP(
+    name="pool2d.pool_vpu", family="pool2d", impl=pool_vpu_mod.pool2d_window,
+    footprint_fn=pool_vpu_mod.footprint, uses_mxu=False,
+    tags=("analogue:Conv1", "windowed-reduce"),
+    description="Unrolled strided-slice window reduce; pure VPU, "
+                "minimal VMEM."))
+POOL2D.register(KernelIP(
+    name="pool2d.pool_im2col", family="pool2d",
+    impl=pool_im2col_mod.pool2d_im2col,
+    footprint_fn=pool_im2col_mod.footprint, uses_mxu=True,
+    tags=("analogue:Conv2", "im2col"),
+    description="Patch tensor in VMEM; avg collapses to one MXU pass, "
+                "max to one vectorized reduce."))
+
+# --------------------------------------------------------------------------
+# activation family — exact transcendental vs the paper's fixed-point
+# spirit (256-entry LUT over the saturation range, 8-bit operand ceiling).
+# --------------------------------------------------------------------------
+ACTIVATION = IPFamily("activation", reference=activation_ref)
+ACTIVATION.register(KernelIP(
+    name="activation.act_vpu", family="activation",
+    impl=act_exact_mod.activation_exact,
+    footprint_fn=act_exact_mod.footprint, uses_mxu=False,
+    tags=("exact",),
+    description="Exact float32 transcendental on the VPU; full precision, "
+                "high op count for tanh/gelu."))
+ACTIVATION.register(KernelIP(
+    name="activation.act_lut", family="activation",
+    impl=act_lut_mod.activation_lut,
+    footprint_fn=act_lut_mod.footprint, uses_mxu=False,
+    max_operand_bits=8, supports_dtypes=("int8", "bfloat16", "float32"),
+    tags=("fixed-point", "lut"),
+    description="256-entry LUT over the saturation range; ~4 VPU ops and "
+                "1-byte streaming per element; saturating kinds only."))
 
 # --------------------------------------------------------------------------
 # matmul family — the LM-hot-path generalization.
@@ -110,7 +159,8 @@ SSM_SCAN.register(KernelIP(
     description="Selective scan with VMEM-resident state: HBM traffic "
                 "O(T·(Di+Ds)) vs the scan twin's O(T·Di·Ds)."))
 
-FAMILIES = {f.name: f for f in (CONV2D, MATMUL, ATTENTION, SSM_SCAN)}
+FAMILIES = {f.name: f for f in (CONV2D, POOL2D, ACTIVATION, MATMUL,
+                                ATTENTION, SSM_SCAN)}
 
 
 def get_family(name: str) -> IPFamily:

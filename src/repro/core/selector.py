@@ -12,8 +12,8 @@ among the feasible set, with the paper's tie-breaks:
 
 This module is deliberately small and pure: it is called at trace time
 (never inside jit) and returns a KernelIP whose `.impl` the caller then
-invokes or records (on CPU dry-runs we record the decision and lower
-the pure-jnp twin — see models/ops_dispatch.py).
+invokes directly (see the per-family ``kernels/<family>/ops.py``
+wrappers) or records into a plan rendered by ``describe_plan``.
 """
 from __future__ import annotations
 
@@ -23,7 +23,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 
 from repro.core.ip import KernelIP
-from repro.core.library import ATTENTION, CONV2D, MATMUL
+from repro.core.library import ACTIVATION, ATTENTION, CONV2D, MATMUL, POOL2D
 from repro.core.resources import Footprint, ResourceBudget
 
 
@@ -50,7 +50,8 @@ def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
 
 
 def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
-            fp_args: tuple, fp_kwargs: dict, op_bits: int) -> KernelIP:
+            fp_args: tuple, fp_kwargs: dict, op_bits: int):
+    """Returns the winning (KernelIP, Footprint) pair."""
     feasible = []
     for ip in candidates:
         fp = ip.footprint(*fp_args, **fp_kwargs)
@@ -58,21 +59,22 @@ def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
             continue
         if not fp.fits(budget):
             continue
-        feasible.append((_rank(ip, fp, budget), ip.name, ip))
+        feasible.append((_rank(ip, fp, budget), ip.name, ip, fp))
     if not feasible:
         raise ValueError(
             "no feasible IP under budget "
             f"{budget} for shape args {fp_args} (operand bits {op_bits}); "
             f"candidates: {[c.name for c in candidates]}")
     feasible.sort(key=lambda t: t[:2])
-    return feasible[0][2]
+    return feasible[0][2], feasible[0][3]
 
 
 # --------------------------------------------------------------------------
 # conv2d
 # --------------------------------------------------------------------------
 def select_conv_ip(x_shape, w_shape, *, dual: bool, dtype=jnp.int8,
-                   budget: Optional[ResourceBudget] = None) -> KernelIP:
+                   budget: Optional[ResourceBudget] = None,
+                   with_footprint: bool = False):
     budget = budget or ResourceBudget()
     n, h, w_, cin = x_shape
     kh, kw, _, cout = w_shape
@@ -80,15 +82,60 @@ def select_conv_ip(x_shape, w_shape, *, dual: bool, dtype=jnp.int8,
     want = {True: ("conv2d.ip3_packed", "conv2d.ip4_dual"),
             False: ("conv2d.ip1_vpu", "conv2d.ip2_mxu")}[dual]
     cands = [CONV2D[name] for name in want]
-    return _select(cands, budget, (n, h, w_, cin, kh, kw, cout),
-                   {"itemsize": itemsize}, op_bits=_dtype_bits(dtype))
+    ip, fp = _select(cands, budget, (n, h, w_, cin, kh, kw, cout),
+                     {"itemsize": itemsize}, op_bits=_dtype_bits(dtype))
+    return (ip, fp) if with_footprint else ip
+
+
+# --------------------------------------------------------------------------
+# pool2d
+# --------------------------------------------------------------------------
+def select_pool_ip(x_shape, *, window=(2, 2), stride=None, mode: str = "max",
+                   dtype=jnp.int8,
+                   budget: Optional[ResourceBudget] = None,
+                   with_footprint: bool = False):
+    from repro.kernels.pool2d.ref import check_pool_geometry
+
+    budget = budget or ResourceBudget()
+    (kh, kw), (sh, sw) = check_pool_geometry(x_shape, window, stride)
+    n, h, w_, c = x_shape
+    itemsize = jnp.dtype(dtype).itemsize
+    cands = [POOL2D["pool2d.pool_vpu"], POOL2D["pool2d.pool_im2col"]]
+    ip, fp = _select(cands, budget, (n, h, w_, c, kh, kw, sh, sw),
+                     {"itemsize": itemsize, "mode": mode},
+                     op_bits=_dtype_bits(dtype))
+    return (ip, fp) if with_footprint else ip
+
+
+# --------------------------------------------------------------------------
+# activation
+# --------------------------------------------------------------------------
+def select_activation_ip(x_shape, *, kind: str = "relu", dtype=jnp.float32,
+                         budget: Optional[ResourceBudget] = None,
+                         with_footprint: bool = False):
+    from repro.kernels.activation.lut_poly import SUPPORTED_KINDS as LUT_KINDS
+
+    budget = budget or ResourceBudget()
+    n_elems = int(math.prod(int(d) for d in x_shape))
+    itemsize = jnp.dtype(dtype).itemsize
+    cands = [ACTIVATION["activation.act_vpu"]]
+    if kind in LUT_KINDS:   # capability filter: LUT is constant-off-range
+        cands.append(ACTIVATION["activation.act_lut"])
+    # Activation IPs re-encode their input (the LUT member quantizes on
+    # ingest), so the caller's dtype imposes no operand-width floor; the
+    # precision the deployment demands is budget.precision_bits, which
+    # Footprint.fits checks against each member's 8/32-bit ceiling.
+    ip, fp = _select(cands, budget, (n_elems,),
+                     {"itemsize": itemsize, "kind": kind}, op_bits=0)
+    return (ip, fp) if with_footprint else ip
 
 
 # --------------------------------------------------------------------------
 # matmul
 # --------------------------------------------------------------------------
 def select_matmul_ip(a_shape, b_shape, *, dual: bool, dtype=jnp.bfloat16,
-                     budget: Optional[ResourceBudget] = None) -> KernelIP:
+                     budget: Optional[ResourceBudget] = None,
+                     with_footprint: bool = False):
     budget = budget or ResourceBudget()
     m, k = a_shape[-2], a_shape[-1]
     n = b_shape[-1]
@@ -96,8 +143,9 @@ def select_matmul_ip(a_shape, b_shape, *, dual: bool, dtype=jnp.bfloat16,
     want = {True: ("matmul.mm_dual_shared", "matmul.mm_dual_full"),
             False: ("matmul.mm_vpu", "matmul.mm_mxu")}[dual]
     cands = [MATMUL[name] for name in want]
-    return _select(cands, budget, (m, k, n), {"itemsize": itemsize},
-                   op_bits=_dtype_bits(dtype))
+    ip, fp = _select(cands, budget, (m, k, n), {"itemsize": itemsize},
+                     op_bits=_dtype_bits(dtype))
+    return (ip, fp) if with_footprint else ip
 
 
 # --------------------------------------------------------------------------
@@ -105,7 +153,7 @@ def select_matmul_ip(a_shape, b_shape, *, dual: bool, dtype=jnp.bfloat16,
 # --------------------------------------------------------------------------
 def select_attention_ip(q_shape, kv_shape, *,
                         budget: Optional[ResourceBudget] = None,
-                        dtype=jnp.bfloat16) -> KernelIP:
+                        dtype=jnp.bfloat16, with_footprint: bool = False):
     budget = budget or ResourceBudget()
     b, hq, sq, d = q_shape
     _, hkv, skv, _ = kv_shape
@@ -117,8 +165,9 @@ def select_attention_ip(q_shape, kv_shape, *,
         cands = [ATTENTION["attention.attn_naive"],
                  ATTENTION["attention.attn_flash"]]
         args = (b, hq, hkv, sq, skv, d)
-    return _select(cands, budget, args, {"itemsize": itemsize},
-                   op_bits=_dtype_bits(dtype))
+    ip, fp = _select(cands, budget, args, {"itemsize": itemsize},
+                     op_bits=_dtype_bits(dtype))
+    return (ip, fp) if with_footprint else ip
 
 
 def describe_plan(plan) -> str:

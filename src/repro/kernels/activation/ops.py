@@ -1,0 +1,33 @@
+"""Public jit'd wrappers for the activation IP family.
+
+`activation` takes an explicit ``ip=`` name or a ``budget=``
+(ResourceBudget) and defers to the resource-driven selector, mirroring
+`kernels/conv2d/ops.py`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.resources import ResourceBudget
+from repro.kernels.activation.lut_poly import activation_lut
+from repro.kernels.activation.vpu_exact import activation_exact
+
+_MEMBERS = {"act_vpu": activation_exact, "act_lut": activation_lut}
+
+
+def activation(x: jnp.ndarray, *, kind: str = "relu",
+               ip: Optional[str] = None,
+               budget: Optional[ResourceBudget] = None,
+               interpret: bool = True) -> jnp.ndarray:
+    """Elementwise activation through a selected IP (Act1/Act2)."""
+    if ip is None:
+        from repro.core.selector import select_activation_ip
+        ip = select_activation_ip(x.shape, kind=kind, dtype=x.dtype,
+                                  budget=budget or ResourceBudget()).name
+    ip = ip.split(".")[-1]
+    if ip not in _MEMBERS:
+        raise KeyError(
+            f"{ip!r} is not an activation IP (have {sorted(_MEMBERS)})")
+    return _MEMBERS[ip](x, kind=kind, interpret=interpret)

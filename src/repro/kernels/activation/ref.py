@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the activation IP family.
+
+Contract shared by all activation IPs:
+  x : any shape, float (bf16/f32) or integer fixed-point
+  y : same shape; computed in float32
+
+Float inputs are returned in their own dtype; integer inputs are
+promoted to float32 (an activation output is no longer fixed-point —
+requantization is a separate, explicit step, see models/blocks.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("relu", "relu6", "sigmoid", "tanh", "gelu")
+
+_FNS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def activation_ref(x: jnp.ndarray, *, kind: str = "relu") -> jnp.ndarray:
+    if kind not in _FNS:
+        raise ValueError(f"unknown activation {kind!r}; have {KINDS}")
+    y = _FNS[kind](x.astype(jnp.float32))
+    out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+    return y.astype(out_dtype)

@@ -1,0 +1,66 @@
+"""Act1 — exact elementwise activation on the VPU (full-precision IP).
+
+Every transcendental is evaluated exactly (to float32 ULP) by the
+vector unit: zero MXU passes, but a per-element op count that grows
+with the activation's complexity (tanh/gelu cost an order of magnitude
+more VPU ops than relu).  This is the member the selector picks when
+the deployment demands full precision (budget.precision_bits > 8).
+
+Tiling: the input is viewed as (rows, lanes) and the grid walks row
+blocks; each grid step holds one (block_rows, K) tile in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.kernels.activation.ref import _FNS, KINDS
+
+# Approximate VPU scalar-op cost per element (mul/add/cmp units).
+OP_COST = {"relu": 1, "relu6": 2, "sigmoid": 10, "tanh": 12, "gelu": 15}
+
+
+def _kernel(x_ref, o_ref, *, kind, out_dtype):
+    y = _FNS[kind](x_ref[...].astype(jnp.float32))
+    o_ref[...] = y.astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "block_rows", "interpret"))
+def activation_exact(x: jnp.ndarray, *, kind: str = "relu",
+                     block_rows: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    if kind not in KINDS:
+        raise ValueError(f"unknown activation {kind!r}; have {KINDS}")
+    out_dtype = (x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                 else jnp.float32)
+    shape = x.shape
+    k = shape[-1] if x.ndim >= 1 and shape else 1
+    x2 = x.reshape(-1, k) if x.ndim != 2 else x
+    m = x2.shape[0]
+    bm = min(block_rows, m)
+    y2 = pl.pallas_call(
+        functools.partial(_kernel, kind=kind, out_dtype=out_dtype),
+        grid=(pl.cdiv(m, bm),),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        interpret=interpret,
+    )(x2)
+    return y2.reshape(shape)
+
+
+def footprint(n_elems, *, itemsize=4, kind="relu",
+              block_rows: int = 256, lanes: int = 128) -> Footprint:
+    block = min(block_rows * lanes, n_elems)
+    vmem = block * itemsize + block * 4            # in tile + f32 out tile
+    hbm = n_elems * (itemsize + itemsize)          # stream in + out
+    vpu = n_elems * OP_COST.get(kind, 8)
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
+                     vpu_ops=vpu,
+                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     outputs_per_pass=1, max_operand_bits=32)

@@ -1,0 +1,99 @@
+"""Pool2 — im2col pooling (Conv2-style IP: patch matrix built in VMEM).
+
+The KHxKW taps are stacked into a patch tensor inside VMEM, then reduced
+in one shot: for ``avg`` the reduction collapses into a single MXU pass
+(a ones-vector contraction over the tap axis, int32/f32 accumulation,
+matching the oracle's fixed-point floor division); for ``max`` the
+stacked tensor is reduced with one vectorized max over the tap axis.
+Minimal per-tap vector logic at the cost of a KH*KW-times-larger VMEM
+working set — the paper's "ideal for FPGAs with DSP availability and
+limited logic resources", pooling edition.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.resources import (Footprint, hbm_cycles, mxu_pass_cycles,
+                                  vpu_op_cycles)
+from repro.kernels.pool2d.ref import norm_window_stride, pool_dtypes
+
+
+def _kernel(x_ref, o_ref, *, kh, kw, sh, sw, mode, acc_dtype):
+    ho, wo = o_ref.shape[1], o_ref.shape[2]
+    bc = o_ref.shape[3]
+    x = x_ref[0]
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            taps.append(x[i:i + (ho - 1) * sh + 1:sh,
+                          j:j + (wo - 1) * sw + 1:sw, :])
+    patches = jnp.stack(taps, axis=0)                 # (KH*KW, Ho, Wo, bc)
+    if mode == "max":
+        o_ref[0] = jnp.max(patches, axis=0)
+        return
+    # THE single MXU pass: ones(1, KH*KW) @ patches(KH*KW, Ho*Wo*bc).
+    mat = patches.astype(acc_dtype).reshape(kh * kw, ho * wo * bc)
+    ones = jnp.ones((1, kh * kw), acc_dtype)
+    acc = jnp.dot(ones, mat, preferred_element_type=acc_dtype)
+    count = kh * kw
+    if jnp.issubdtype(acc_dtype, jnp.integer):
+        acc = acc // count
+    else:
+        acc = acc / count
+    o_ref[0] = acc.reshape(ho, wo, bc)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "mode", "block_c",
+                                    "interpret"))
+def pool2d_im2col(x: jnp.ndarray, *, window=(2, 2), stride=None,
+                  mode: str = "max", block_c: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    (kh, kw), (sh, sw) = norm_window_stride(window, stride)
+    n, h, w, c = x.shape
+    ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+    acc_dtype, out_dtype = pool_dtypes(x.dtype, mode)
+    bc = min(block_c, c)
+    grid = (n, pl.cdiv(c, bc))
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, sh=sh, sw=sw, mode=mode,
+                          acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, h, w, bc), lambda b, ci: (b, 0, 0, ci))],
+        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda b, ci: (b, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+def footprint(n, h, w, c, kh, kw, sh, sw, *, itemsize=1, mode="max",
+              block_c: int = 128) -> Footprint:
+    ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+    bc = min(block_c, c)
+    out_item = itemsize if mode == "max" else 4
+    taps = kh * kw
+    # avg materializes a second, 4-byte-accumulator copy of the patches.
+    patch_item = itemsize if mode == "max" else itemsize + 4
+    vmem = (h * w * bc * itemsize
+            + taps * ho * wo * bc * patch_item    # stacked patch tensor
+            + ho * wo * bc * out_item)
+    hbm = n * h * w * c * itemsize + n * ho * wo * c * out_item
+    grid_steps = n * ((c + bc - 1) // bc)
+    # Patch construction is pure data movement: one op per tap element.
+    move = n * ho * wo * c * taps
+    if mode == "avg":
+        passes = grid_steps
+        cyc = grid_steps * mxu_pass_cycles(1, taps, ho * wo * bc)
+        vpu = move
+    else:
+        passes = 0
+        cyc = 0.0
+        vpu = 2 * move          # movement + the vectorized max reduce
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
+                     vpu_ops=vpu,
+                     est_cycles=max(cyc, vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     outputs_per_pass=1, max_operand_bits=32)

@@ -1,0 +1,88 @@
+"""Pool1 — windowed-reduce pooling on the VPU (Conv1-style logic-only IP).
+
+The kernel body issues no dot op: the KHxKW window reduction runs as an
+unrolled chain of strided-slice compares (max) or adds (avg) over the
+image plane — one VPU op per tap per output element, zero MXU passes.
+This is the member the selector picks when the MXU is spoken for,
+mirroring the paper's "suitable for FPGAs with limited DSPs".
+
+Tiling: grid over (batch, channel tiles).  Each grid step holds one
+input plane (H, W, bc) and one output plane (Ho, Wo, bc) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.kernels.pool2d.ref import norm_window_stride, pool_dtypes
+
+
+def _kernel(x_ref, o_ref, *, kh, kw, sh, sw, mode, acc_dtype):
+    ho, wo = o_ref.shape[1], o_ref.shape[2]
+    x = x_ref[0]
+    if mode == "avg":
+        x = x.astype(acc_dtype)
+    acc = None
+    for i in range(kh):
+        for j in range(kw):
+            win = x[i:i + (ho - 1) * sh + 1:sh,
+                    j:j + (wo - 1) * sw + 1:sw, :]       # (Ho, Wo, bc)
+            if acc is None:
+                acc = win
+            elif mode == "max":
+                acc = jnp.maximum(acc, win)
+            else:
+                acc = acc + win
+    if mode == "avg":
+        count = kh * kw
+        if jnp.issubdtype(acc_dtype, jnp.integer):
+            acc = acc // count
+        else:
+            acc = acc / count
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "mode", "block_c",
+                                    "interpret"))
+def pool2d_window(x: jnp.ndarray, *, window=(2, 2), stride=None,
+                  mode: str = "max", block_c: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    (kh, kw), (sh, sw) = norm_window_stride(window, stride)
+    n, h, w, c = x.shape
+    ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+    acc_dtype, out_dtype = pool_dtypes(x.dtype, mode)
+    bc = min(block_c, c)
+    grid = (n, pl.cdiv(c, bc))
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, sh=sh, sw=sw, mode=mode,
+                          acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, h, w, bc), lambda b, ci: (b, 0, 0, ci))],
+        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda b, ci: (b, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+def footprint(n, h, w, c, kh, kw, sh, sw, *, itemsize=1, mode="max",
+              block_c: int = 128) -> Footprint:
+    ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+    bc = min(block_c, c)
+    out_item = itemsize if mode == "max" else 4
+    # avg casts the plane to the 4-byte accumulator dtype inside VMEM.
+    cast_plane = 0 if mode == "max" else h * w * bc * 4
+    vmem = (h * w * bc * itemsize                 # input plane
+            + cast_plane
+            + ho * wo * bc * out_item)            # output plane
+    hbm = n * h * w * c * itemsize + n * ho * wo * c * out_item
+    # One compare/add per tap, plus the strided gather for each window.
+    vpu = 2 * n * ho * wo * c * kh * kw
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
+                     vpu_ops=vpu,
+                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     outputs_per_pass=1, max_operand_bits=32)

@@ -126,6 +126,60 @@ def apply_rope(cfg: ModelConfig, x, cos, sin):
 
 
 # ---------------------------------------------------------------------------
+# CNN block — conv -> pool -> activation, every op dispatched through the
+# resource-driven selector under ONE ResourceBudget (the paper's full-layer
+# scenario: a CNN layer whose implementation adapts to available resources
+# while its math stays fixed).
+# ---------------------------------------------------------------------------
+def init_cnn_block(key, cin: int, cout: int, k: int = 3,
+                   dtype=jnp.float32):
+    scale = (k * k * cin) ** -0.5
+    return {"w": (jax.random.normal(key, (k, k, cin, cout)) * scale
+                  ).astype(dtype)}
+
+
+def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
+                    pool_stride=None, pool_mode: str = "max",
+                    activation: str = "relu", interpret: bool = True,
+                    plan=None, site: str = "cnn_block"):
+    """One adaptive CNN layer: conv -> pool -> activation.
+
+    Each stage asks the selector for the cheapest feasible IP under
+    ``budget`` and runs the selected Pallas kernel.  When ``plan`` (a
+    dict) is passed, the three (KernelIP, Footprint) decisions are
+    recorded under ``site`` — renderable with ``describe_plan``.
+    """
+    from repro.core.resources import ResourceBudget
+    from repro.core.selector import (select_activation_ip, select_conv_ip,
+                                     select_pool_ip)
+    from repro.kernels.activation.ops import activation as activation_op
+    from repro.kernels.conv2d.ops import conv2d
+    from repro.kernels.pool2d.ops import pool2d
+
+    budget = budget or ResourceBudget()
+
+    ip, fp = select_conv_ip(x.shape, p["w"].shape, dual=False, dtype=x.dtype,
+                            budget=budget, with_footprint=True)
+    if plan is not None:
+        plan[f"{site}.conv"] = (ip, fp)
+    y = conv2d(x, p["w"], ip=ip.name, interpret=interpret)
+
+    ip, fp = select_pool_ip(y.shape, window=pool_window, stride=pool_stride,
+                            mode=pool_mode, dtype=y.dtype, budget=budget,
+                            with_footprint=True)
+    if plan is not None:
+        plan[f"{site}.pool"] = (ip, fp)
+    y = pool2d(y, window=pool_window, stride=pool_stride, mode=pool_mode,
+               ip=ip.name, interpret=interpret)
+
+    ip, fp = select_activation_ip(y.shape, kind=activation, dtype=y.dtype,
+                                  budget=budget, with_footprint=True)
+    if plan is not None:
+        plan[f"{site}.act"] = (ip, fp)
+    return activation_op(y, kind=activation, ip=ip.name, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 def softmax_xent(logits, labels, *, z_loss: float = 1e-4):

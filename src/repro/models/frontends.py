@@ -1,8 +1,10 @@
-"""Modality frontend STUBS + input spec providers.
+"""Modality frontends + input spec providers.
 
 Per the assignment, [audio]/[vlm] archs specify the transformer
 backbone only: ``input_specs()`` provides precomputed frame/patch
-embeddings.  This module is the single source of truth for what each
+embeddings.  The CNN vision frontend below is the exception — a real
+adaptive-IP image stem (conv -> pool -> activation per block, all
+selector-dispatched) that produces those patch embeddings itself.  This module is the single source of truth for what each
 (arch x shape x step-kind) consumes — used identically by the dry-run
 (abstract ShapeDtypeStructs) and by tests/examples (concrete sampled
 arrays via ``make_inputs(..., abstract=False)``).
@@ -45,6 +47,38 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
         return {"tokens": _spec((B, S), jnp.int32)}
     # decode: one new token against a cache of S (caches built separately)
     return {"tokens": _spec((B, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# CNN vision frontend — a real (non-stub) image stem built from adaptive
+# cnn_blocks: every conv/pool/activation inside is dispatched through the
+# resource-driven selector, and the pooled feature map is flattened to the
+# (B, S, d_model) patch-embedding contract `embed_inputs` models consume.
+# ---------------------------------------------------------------------------
+def init_cnn_frontend(key, *, channels=(3, 16, 32), k: int = 3,
+                      d_model: int = 64, dtype=jnp.float32):
+    from repro.models.blocks import init_cnn_block
+    keys = jax.random.split(key, len(channels))
+    blocks = [init_cnn_block(kb, cin, cout, k, dtype=dtype)
+              for kb, cin, cout in zip(keys, channels[:-1], channels[1:])]
+    proj = (jax.random.normal(keys[-1], (channels[-1], d_model))
+            * channels[-1] ** -0.5).astype(dtype)
+    return {"blocks": blocks, "proj": proj}
+
+
+def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
+                       activation: str = "relu", interpret: bool = True,
+                       plan=None):
+    """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model)."""
+    from repro.models.blocks import apply_cnn_block
+    x = images
+    for li, bp in enumerate(p["blocks"]):
+        x = apply_cnn_block(bp, x, budget=budget, pool_window=pool_window,
+                            activation=activation, interpret=interpret,
+                            plan=plan, site=f"frontend.block{li}")
+    b, h, w, c = x.shape
+    tokens = x.reshape(b, h * w, c)
+    return jnp.einsum("bsc,cd->bsd", tokens, p["proj"].astype(x.dtype))
 
 
 def make_inputs(cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,

@@ -1,0 +1,83 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must collect and run in environments without the
+``hypothesis`` test extra (the real library is declared in
+``pyproject.toml`` under ``[project.optional-dependencies] test`` and is
+used when present).  This module mimics the slice of the API the tests
+use — ``given``, ``settings``, and the ``integers`` / ``booleans`` /
+``sampled_from`` strategies — by running each property a fixed number of
+times over a seeded PRNG.  It is installed into ``sys.modules`` by
+``conftest.py`` only when the real package is missing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+__version__ = "0.0-fallback"
+
+# How many deterministic examples to draw per property.  Kept small:
+# the fallback is a smoke-level property check, not a shrinking fuzzer.
+MAX_FALLBACK_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, booleans=booleans, sampled_from=sampled_from,
+    floats=floats)
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # @settings may sit outside @given (attr lands on this wrapper)
+            # or inside it (attr landed on the raw fn) — honor both.
+            cfg = getattr(wrapper, "_fallback_settings",
+                          getattr(fn, "_fallback_settings", {}))
+            n = min(int(cfg.get("max_examples", MAX_FALLBACK_EXAMPLES)),
+                    MAX_FALLBACK_EXAMPLES)
+            rnd = random.Random(0xADA9)
+            for _ in range(n):
+                drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Pytest resolves fixtures from the signature: expose the original
+        # parameters minus the ones @given supplies, so strategy kwargs are
+        # not mistaken for fixtures.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,7 +1,27 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real single
 device; multi-device tests spawn subprocesses (see test_distributed.py)."""
+import importlib.util
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+# ---------------------------------------------------------------------------
+# hypothesis is an optional test dependency (pyproject [test] extra).  When
+# absent, install the deterministic fallback so property-based modules still
+# collect and run (each property executes a small seeded example sweep).
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
 @pytest.fixture

@@ -1,0 +1,86 @@
+"""End-to-end adaptive CNN layer: conv -> pool -> activation, all three
+dispatched through the resource-driven selector under one budget — the
+paper's future-work scenario as a single block."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resources import ResourceBudget
+from repro.models.blocks import apply_cnn_block, init_cnn_block
+from repro.models.frontends import apply_cnn_frontend, init_cnn_frontend
+
+
+@pytest.fixture
+def block():
+    return init_cnn_block(jax.random.PRNGKey(0), cin=3, cout=16, k=3)
+
+
+@pytest.fixture
+def images(rng):
+    return jnp.asarray(rng.normal(size=(2, 16, 16, 3)).astype(np.float32))
+
+
+def test_block_shapes_and_plan(block, images):
+    plan = {}
+    y = apply_cnn_block(block, images, plan=plan, activation="tanh")
+    # 16x16 -(3x3 valid)-> 14x14 -(2x2 pool)-> 7x7
+    assert y.shape == (2, 7, 7, 16)
+    assert set(plan) == {"cnn_block.conv", "cnn_block.pool", "cnn_block.act"}
+    for site, (ip, fp) in plan.items():
+        assert fp.fits(ResourceBudget()), (site, ip.name)
+    assert plan["cnn_block.conv"][0].family == "conv2d"
+    assert plan["cnn_block.pool"][0].family == "pool2d"
+    assert plan["cnn_block.act"][0].family == "activation"
+
+
+def test_block_budget_invariance(block, images):
+    """Different budgets select different IPs but identical math."""
+    base = apply_cnn_block(block, images, activation="relu")
+    for budget in [ResourceBudget(mxu_available=False),
+                   ResourceBudget(vmem_bytes=2 * 2**20)]:
+        out = apply_cnn_block(block, images, budget=budget,
+                              activation="relu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_block_matches_plain_jnp_oracle(block, images):
+    from repro.kernels.activation.ref import activation_ref
+    from repro.kernels.conv2d.ref import conv2d_ref
+    from repro.kernels.pool2d.ref import pool2d_ref
+    out = apply_cnn_block(block, images, pool_mode="avg", activation="tanh")
+    ref = activation_ref(pool2d_ref(conv2d_ref(images, block["w"]),
+                                    mode="avg"), kind="tanh")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_avg_pool_and_every_activation(block, images):
+    for kind in ("relu", "relu6", "sigmoid", "tanh", "gelu"):
+        y = apply_cnn_block(block, images, pool_mode="avg", activation=kind)
+        assert y.shape == (2, 7, 7, 16)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_frontend_produces_patch_embeddings(rng):
+    p = init_cnn_frontend(jax.random.PRNGKey(1), channels=(3, 8, 16),
+                          d_model=32)
+    imgs = jnp.asarray(rng.normal(size=(2, 16, 16, 3)).astype(np.float32))
+    plan = {}
+    emb = apply_cnn_frontend(p, imgs, plan=plan)
+    # 16 -> conv 14 -> pool 7 -> conv 5 -> pool 2; S = 2*2
+    assert emb.shape == (2, 4, 32)
+    # two blocks x three selector decisions each
+    assert len(plan) == 6
+
+
+def test_frontend_budget_invariance(rng):
+    p = init_cnn_frontend(jax.random.PRNGKey(2), channels=(3, 8, 8),
+                          d_model=16)
+    imgs = jnp.asarray(rng.normal(size=(1, 12, 12, 3)).astype(np.float32))
+    base = apply_cnn_frontend(p, imgs)
+    starved = apply_cnn_frontend(p, imgs,
+                                 budget=ResourceBudget(mxu_available=False))
+    np.testing.assert_allclose(np.asarray(starved), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)

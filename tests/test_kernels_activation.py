@@ -1,0 +1,134 @@
+"""activation IP family vs the pure-jnp oracle: exactness of the VPU
+member, bounded error of the fixed-point LUT member, capability
+filtering, footprint monotonicity, and selector behavior."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.resources import ResourceBudget
+from repro.core.selector import select_activation_ip
+from repro.kernels.activation.lut_poly import (RANGES, SUPPORTED_KINDS,
+                                               activation_lut,
+                                               footprint as fp_lut)
+from repro.kernels.activation.ops import activation
+from repro.kernels.activation.ref import KINDS, activation_ref
+from repro.kernels.activation.vpu_exact import footprint as fp_exact
+
+SHAPES = [(2, 8, 8, 16), (5, 300), (1000,), (3, 1, 7)]
+
+# Worst-case LUT error: half a 256-level quantization step times the
+# activation's Lipschitz constant, plus the saturation tail.
+LUT_ATOL = 0.05
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_exact_member_matches_oracle(rng, shape, kind):
+    x = jnp.asarray(rng.normal(0, 2, shape).astype(np.float32))
+    out = activation(x, kind=kind, ip="act_vpu")
+    ref = activation_ref(x, kind=kind)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", SUPPORTED_KINDS)
+def test_lut_member_bounded_error(rng, kind):
+    # Cover the tabulated range AND the saturated tails.
+    x = jnp.asarray(rng.uniform(-3 * RANGES[kind], 3 * RANGES[kind],
+                                (4, 512)).astype(np.float32))
+    out = activation(x, kind=kind, ip="act_lut")
+    ref = activation_ref(x, kind=kind)
+    err = np.abs(np.asarray(out) - np.asarray(ref)).max()
+    assert err < LUT_ATOL, (kind, err)
+
+
+def test_lut_rejects_unbounded_kinds():
+    x = jnp.ones((4, 4), jnp.float32)
+    for kind in ("relu", "gelu"):
+        with pytest.raises(ValueError, match="saturating"):
+            activation_lut(x, kind=kind)
+
+
+def test_dtype_contract(rng):
+    xf = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    assert activation(xf.astype(jnp.bfloat16), kind="tanh",
+                      ip="act_vpu").dtype == jnp.bfloat16
+    assert activation(xf.astype(jnp.bfloat16), kind="tanh",
+                      ip="act_lut").dtype == jnp.bfloat16
+    xi = jnp.asarray(rng.integers(-5, 5, (3, 4)).astype(np.int32))
+    assert activation(xi, kind="relu", ip="act_vpu").dtype == jnp.float32
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       kind=st.sampled_from(list(SUPPORTED_KINDS)))
+def test_lut_error_bound_property(seed, kind):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 4, (2, 256)).astype(np.float32))
+    out = activation_lut(x, kind=kind)
+    ref = activation_ref(x, kind=kind)
+    assert np.abs(np.asarray(out) - np.asarray(ref)).max() < LUT_ATOL
+
+
+# --------------------------------------------------------------------------
+# Footprints
+# --------------------------------------------------------------------------
+def test_footprint_monotone_in_elements():
+    for fp_fn, kind in [(fp_exact, "tanh"), (fp_lut, "tanh")]:
+        small = fp_fn(1 << 10, itemsize=4, kind=kind)
+        big = fp_fn(1 << 20, itemsize=4, kind=kind)
+        assert big.hbm_bytes > small.hbm_bytes
+        assert big.vpu_ops > small.vpu_ops
+        assert big.est_cycles > small.est_cycles
+
+
+def test_lut_is_the_low_resource_member():
+    n = 1 << 20
+    exact = fp_exact(n, itemsize=4, kind="tanh")
+    lut = fp_lut(n, itemsize=4, kind="tanh")
+    assert lut.vpu_ops < exact.vpu_ops
+    assert lut.hbm_bytes < exact.hbm_bytes     # 1-byte operand streaming
+    assert lut.est_cycles < exact.est_cycles
+    assert lut.max_operand_bits == 8
+    assert exact.max_operand_bits == 32
+
+
+# --------------------------------------------------------------------------
+# Selector
+# --------------------------------------------------------------------------
+XS = (2, 16, 16, 64)
+
+
+def test_full_precision_budget_forces_exact():
+    ip = select_activation_ip(XS, kind="tanh",
+                              budget=ResourceBudget(precision_bits=16))
+    assert ip.name == "activation.act_vpu"
+
+
+def test_low_precision_budget_selects_lut():
+    ip = select_activation_ip(XS, kind="tanh",
+                              budget=ResourceBudget(precision_bits=8))
+    assert ip.name == "activation.act_lut"
+
+
+def test_unbounded_kind_falls_back_to_exact_even_at_low_precision():
+    ip = select_activation_ip(XS, kind="gelu",
+                              budget=ResourceBudget(precision_bits=8))
+    assert ip.name == "activation.act_vpu"
+
+
+def test_infeasible_everywhere_raises_like_conv2d():
+    with pytest.raises(ValueError, match="no feasible IP"):
+        select_activation_ip(XS, kind="tanh",
+                             budget=ResourceBudget(vpu_ops_budget=10))
+
+
+def test_selected_ip_always_fits_budget():
+    for budget in [ResourceBudget(), ResourceBudget(precision_bits=8),
+                   ResourceBudget(mxu_available=False)]:
+        for kind in KINDS:
+            ip = select_activation_ip(XS, kind=kind, budget=budget)
+            fp = ip.footprint(int(np.prod(XS)), itemsize=4, kind=kind)
+            assert fp.fits(budget), (ip.name, kind, budget)

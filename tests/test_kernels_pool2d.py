@@ -1,0 +1,145 @@
+"""pool2d IP family vs the pure-jnp oracle: shape/stride/dtype sweeps,
+footprint monotonicity, and selector behavior under budgets."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.resources import ResourceBudget
+from repro.core.selector import select_pool_ip
+from repro.kernels.pool2d.mxu_im2col import footprint as fp_im2col
+from repro.kernels.pool2d.ops import pool2d
+from repro.kernels.pool2d.ref import pool2d_out_shape, pool2d_ref
+from repro.kernels.pool2d.vpu_window import footprint as fp_window
+
+CASES = [  # (N, H, W, C, window, stride)
+    (1, 8, 8, 1, (2, 2), None),
+    (2, 12, 12, 3, (2, 2), None),
+    (1, 9, 7, 5, (3, 3), (2, 2)),
+    (1, 10, 10, 4, (3, 2), (3, 2)),
+    (2, 7, 7, 130, (2, 2), (1, 1)),   # c > one lane tile, overlapping
+]
+
+IPS = ["pool_vpu", "pool_im2col"]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("ip", IPS)
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_int8_exact(rng, case, ip, mode):
+    n, h, w, c, win, stride = case
+    x = jnp.asarray(rng.integers(-128, 128, (n, h, w, c), dtype=np.int8))
+    out = pool2d(x, window=win, stride=stride, mode=mode, ip=ip)
+    ref = pool2d_ref(x, window=win, stride=stride, mode=mode)
+    assert out.dtype == ref.dtype
+    assert out.shape == pool2d_out_shape(x.shape, win, stride)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("ip", IPS)
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_float32(rng, ip, mode):
+    x = jnp.asarray(rng.normal(size=(2, 10, 10, 4)).astype(np.float32))
+    out = pool2d(x, window=(2, 2), mode=mode, ip=ip)
+    ref = pool2d_ref(x, window=(2, 2), mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_max_preserves_dtype_avg_promotes(rng):
+    x = jnp.asarray(rng.integers(-128, 128, (1, 4, 4, 2), dtype=np.int8))
+    assert pool2d(x, mode="max", ip="pool_vpu").dtype == jnp.int8
+    assert pool2d(x, mode="avg", ip="pool_vpu").dtype == jnp.int32
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), h=st.integers(4, 10),
+       c=st.integers(1, 6), k=st.sampled_from([2, 3]),
+       mode=st.sampled_from(["max", "avg"]))
+def test_members_agree_property(seed, h, c, k, mode):
+    """Both members are exact vs the oracle for ALL int8 inputs."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (1, h, h, c), dtype=np.int8))
+    ref = pool2d_ref(x, window=(k, k), mode=mode)
+    for ip in IPS:
+        out = pool2d(x, window=(k, k), mode=mode, ip=ip)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# --------------------------------------------------------------------------
+# Footprints
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("fp_fn", [fp_window, fp_im2col])
+def test_footprint_monotone_in_shape(fp_fn):
+    base = fp_fn(1, 16, 16, 8, 2, 2, 2, 2, itemsize=1, mode="avg")
+    for scaled in [fp_fn(2, 16, 16, 8, 2, 2, 2, 2, itemsize=1, mode="avg"),
+                   fp_fn(1, 32, 32, 8, 2, 2, 2, 2, itemsize=1, mode="avg"),
+                   fp_fn(1, 16, 16, 64, 2, 2, 2, 2, itemsize=1, mode="avg")]:
+        assert scaled.hbm_bytes >= base.hbm_bytes
+        assert scaled.vpu_ops >= base.vpu_ops
+        assert scaled.vmem_bytes >= base.vmem_bytes
+        assert scaled.est_cycles >= base.est_cycles
+
+
+@pytest.mark.parametrize("fp_fn", [fp_window, fp_im2col])
+def test_footprint_avg_prices_the_accumulator(fp_fn):
+    """avg materializes a 4-byte accumulator copy in VMEM; the footprint
+    (the resource contract) must charge for it."""
+    mx = fp_fn(1, 16, 16, 8, 2, 2, 2, 2, itemsize=1, mode="max")
+    av = fp_fn(1, 16, 16, 8, 2, 2, 2, 2, itemsize=1, mode="avg")
+    assert av.vmem_bytes > mx.vmem_bytes
+
+
+def test_oversized_window_rejected_everywhere(rng):
+    x = jnp.asarray(rng.integers(-128, 128, (1, 4, 4, 2), dtype=np.int8))
+    with pytest.raises(ValueError, match="exceeds the input plane"):
+        pool2d(x, window=(8, 8))
+    with pytest.raises(ValueError, match="exceeds the input plane"):
+        select_pool_ip(x.shape, window=(8, 8))   # plan-only callers too
+
+
+def test_footprint_window_needs_less_vmem():
+    """The windowed-reduce member never buffers the KH*KW patch tensor."""
+    a = fp_window(1, 32, 32, 16, 3, 3, 1, 1, itemsize=4, mode="max")
+    b = fp_im2col(1, 32, 32, 16, 3, 3, 1, 1, itemsize=4, mode="max")
+    assert a.vmem_bytes < b.vmem_bytes
+    assert b.mxu_passes == 0          # max mode never touches the MXU
+    assert fp_im2col(1, 32, 32, 16, 3, 3, 1, 1, itemsize=4,
+                     mode="avg").mxu_passes > 0
+
+
+# --------------------------------------------------------------------------
+# Selector
+# --------------------------------------------------------------------------
+XS = (2, 32, 32, 64)
+
+
+def test_no_mxu_budget_forces_windowed_avg():
+    ip = select_pool_ip(XS, mode="avg",
+                        budget=ResourceBudget(mxu_available=False))
+    assert ip.name == "pool2d.pool_vpu"
+
+
+def test_vpu_starved_budget_forces_im2col_avg():
+    """Budget admits im2col's data movement but not the windowed member's
+    per-tap reduce chain (2x the ops)."""
+    fp = fp_im2col(*XS, 2, 2, 2, 2, itemsize=1, mode="avg")
+    budget = ResourceBudget(vpu_ops_budget=int(fp.vpu_ops * 1.5))
+    ip = select_pool_ip(XS, mode="avg", budget=budget)
+    assert ip.name == "pool2d.pool_im2col"
+
+
+def test_infeasible_everywhere_raises_like_conv2d():
+    with pytest.raises(ValueError, match="no feasible IP"):
+        select_pool_ip(XS, mode="avg",
+                       budget=ResourceBudget(mxu_available=False,
+                                             vpu_ops_budget=10))
+
+
+def test_selected_ip_always_fits_budget():
+    for budget in [ResourceBudget(), ResourceBudget(mxu_available=False),
+                   ResourceBudget(vmem_bytes=1 * 2**20)]:
+        for mode in ("max", "avg"):
+            ip = select_pool_ip(XS, mode=mode, dtype=jnp.int8, budget=budget)
+            fp = ip.footprint(*XS, 2, 2, 2, 2, itemsize=1, mode=mode)
+            assert fp.fits(budget), (ip.name, mode, budget)

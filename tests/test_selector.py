@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.library import ATTENTION, CONV2D, MATMUL, get_ip
+from repro.core.library import (ACTIVATION, ATTENTION, CONV2D, MATMUL,
+                                POOL2D, get_ip)
 from repro.core.resources import Footprint, ResourceBudget
 from repro.core.selector import (select_attention_ip, select_conv_ip,
                                  select_matmul_ip)
@@ -96,10 +97,12 @@ def test_matmul_selection_feasible(m, k, n):
 
 
 def test_library_registry_integrity():
-    for fam in (CONV2D, MATMUL, ATTENTION):
+    for fam in (CONV2D, POOL2D, ACTIVATION, MATMUL, ATTENTION):
         for ip in fam:
             assert ip.name.startswith(fam.name + ".")
             assert callable(ip.impl)
     assert get_ip("conv2d.ip3_packed").max_operand_bits == 8
     assert get_ip("conv2d.ip3_packed").outputs_per_pass == 2
     assert get_ip("matmul.mm_vpu").uses_mxu is False
+    assert get_ip("pool2d.pool_vpu").uses_mxu is False
+    assert get_ip("activation.act_lut").max_operand_bits == 8
