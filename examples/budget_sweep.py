@@ -1,7 +1,9 @@
 """Budget sweep — paper Table III as an executable experiment, extended
-to the LM hot path: for each resource budget, report which IP the
-selector assigns for (a) the paper's 3x3 conv, (b) an LM FFN matmul,
-(c) attention at train/prefill/decode shapes.
+to the LM hot path and planned as a WHOLE NETWORK: for each resource
+budget, the paper's 3x3 conv, an LM FFN matmul, and attention at
+train/decode shapes are mapped by one ``plan_network`` call — the four
+sites share the envelope (partitioned proportional-to-cost with greedy
+repair) instead of each seeing the full budget.
 
     PYTHONPATH=src python examples/budget_sweep.py
 """
@@ -13,9 +15,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.ip import SiteSpec
+from repro.core.plan import plan_network, select_ip
 from repro.core.resources import ResourceBudget
-from repro.core.selector import (select_attention_ip, select_conv_ip,
-                                 select_matmul_ip)
 
 BUDGETS = {
     "ample": ResourceBudget(),
@@ -27,44 +29,52 @@ BUDGETS = {
 }
 
 
+def lm_network_specs(cfg, budget):
+    D, F = cfg.d_model, cfg.d_ff
+    dual = budget.prefer_parallel_streams
+    mm_dtype = jnp.int8 if budget.precision_bits <= 8 else jnp.bfloat16
+    return [
+        SiteSpec.make("conv3x3", "conv2d", ((8, 64, 64, 16), (3, 3, 16, 32)),
+                      jnp.int8, dual=dual),
+        SiteSpec.make("ffn", "matmul", ((4096, D), (D, F)), mm_dtype,
+                      dual=dual),
+        SiteSpec.make("attn_train4k", "attention",
+                      ((8, 32, 4096, 64), (8, 8, 4096, 64)), jnp.bfloat16),
+        SiteSpec.make("attn_decode32k", "attention",
+                      ((128, 32, 1, 64), (128, 8, 32768, 64)), jnp.bfloat16),
+    ]
+
+
 def main():
     cfg = get_config("llama3.2-1b")
-    D, F = cfg.d_model, cfg.d_ff
-    print(f"arch for LM sites: {cfg.name} (D={D}, F={F})\n")
+    print(f"arch for LM sites: {cfg.name} (D={cfg.d_model}, F={cfg.d_ff})\n")
     hdr = (f"{'budget':<14s} {'conv3x3':<18s} {'ffn matmul':<20s} "
            f"{'attn train4k':<22s} {'attn decode32k'}")
     print(hdr)
     print("-" * len(hdr))
     for name, b in BUDGETS.items():
+        specs = lm_network_specs(cfg, b)
         try:
-            conv = select_conv_ip((8, 64, 64, 16), (3, 3, 16, 32),
-                                  dual=b.prefer_parallel_streams,
-                                  dtype=jnp.int8, budget=b).name
+            plan = plan_network(specs, b)
+            cells = [plan[s.name][0].name.split(".")[-1] for s in specs]
         except ValueError:
-            conv = "infeasible"
-        dtype = jnp.int8 if b.precision_bits <= 8 else jnp.bfloat16
-        try:
-            mm = select_matmul_ip((4096, D), (D, F),
-                                  dual=b.prefer_parallel_streams,
-                                  dtype=dtype, budget=b).name
-        except ValueError:
-            mm = "infeasible"
-        try:
-            at = select_attention_ip((8, 32, 4096, 64), (8, 8, 4096, 64),
-                                     budget=b).name
-        except ValueError:
-            at = "infeasible"
-        try:
-            ad = select_attention_ip((128, 32, 1, 64), (128, 8, 32768, 64),
-                                     budget=b).name
-        except ValueError:
-            ad = "infeasible"
-        print(f"{name:<14s} {conv.split('.')[-1]:<18s} "
-              f"{mm.split('.')[-1]:<20s} {at.split('.')[-1]:<22s} "
-              f"{ad.split('.')[-1]}")
+            # no joint plan: fall back to per-site full-budget selection
+            # so the table shows WHICH sites cannot run
+            cells = []
+            for s in specs:
+                try:
+                    cells.append(
+                        select_ip(s.family, s, budget=b).name.split(".")[-1]
+                        + "*")
+                except ValueError:
+                    cells.append("infeasible")
+        print(f"{name:<14s} {cells[0]:<18s} {cells[1]:<20s} "
+              f"{cells[2]:<22s} {cells[3]}")
     print("\nNote: 'no_mxu' steers every site to the logic-only (Conv1-"
           "analogue) members; 'int8_parallel' unlocks the packed dual-"
-          "stream (Conv3-analogue) members — paper Table I, automated.")
+          "stream (Conv3-analogue) members — paper Table I, automated. "
+          "A '*' marks per-site fallback choices when no joint "
+          "whole-network plan exists under the budget.")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """Adaptive CNN pipeline — the paper's future-work scenario closed:
-a full CNN layer stack (conv -> pool -> activation) where EVERY op is
-dispatched through the resource-driven selector under one budget.
+a full CNN layer stack (conv -> pool -> activation) planned as ONE
+NetworkPlan — every op site competes for a slice of the same budget,
+and the budget is partitioned across the whole graph up front.
 
     PYTHONPATH=src python examples/cnn_pipeline.py
 
 Part 1 runs an int8 fixed-point CNN under three deployment budgets
-(ample / MXU-starved / VPU-starved): the selected IPs differ per budget,
+(ample / MXU-starved / VPU-starved): the planned IPs differ per budget,
 the outputs are bit-identical — adaptation changes the implementation,
-never the math.
+never the math.  Plans are memoized (re-planning the same graph+budget
+is a dict hit) and serialize to JSON for experiment artifacts.
 
 Part 2 shows the precision axis the activation family adds: under an
 8-bit-precision budget the selector swaps the exact transcendental for
@@ -22,9 +24,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import NetworkPlan, plan_network, planner_stats
 from repro.core.resources import ResourceBudget
-from repro.core.selector import (describe_plan, select_activation_ip,
-                                 select_conv_ip, select_pool_ip)
+from repro.core.selector import select_activation_ip
 from repro.kernels.activation.ops import activation
 from repro.kernels.conv2d.ops import conv2d
 from repro.kernels.pool2d.ops import pool2d
@@ -46,24 +48,33 @@ def requantize(y):
     return jnp.clip(y // 8, -128, 127).astype(jnp.int8)
 
 
+def stack_site_specs(img_shape):
+    """The whole stack as declarative sites: conv (int8 operands) ->
+    maxpool -> relu (both on the conv's int32 accumulator), requantized
+    back to int8 between layers.  Per-layer sites come from the same
+    oracle-derived helper the models use."""
+    from repro.models.blocks import cnn_block_site_specs
+    specs = []
+    shape = img_shape
+    for li, (cin, cout, k) in enumerate(LAYERS):
+        layer, out = cnn_block_site_specs(
+            shape, (k, k, cin, cout), x_dtype=jnp.int8, pool_mode="max",
+            activation="relu", site=f"layer{li}")
+        specs += layer
+        shape = out.shape
+    return specs
+
+
 def run_stack(img, weights, budget):
-    """conv -> maxpool -> relu -> requant per layer, all selector-driven."""
-    plan = {}
+    """conv -> maxpool -> relu -> requant per layer, from one plan."""
+    plan = plan_network(stack_site_specs(img.shape), budget)
     x = img
     for li, w in enumerate(weights):
-        ip, fp = select_conv_ip(x.shape, w.shape, dual=False, dtype=jnp.int8,
-                                budget=budget, with_footprint=True)
-        plan[f"layer{li}.conv"] = (ip, fp)
-        x = conv2d(x, w, ip=ip.name)
-        ip, fp = select_pool_ip(x.shape, window=(2, 2), mode="max",
-                                dtype=x.dtype, budget=budget,
-                                with_footprint=True)
-        plan[f"layer{li}.pool"] = (ip, fp)
-        x = pool2d(x, window=(2, 2), mode="max", ip=ip.name)
-        ip, fp = select_activation_ip(x.shape, kind="relu", dtype=x.dtype,
-                                      budget=budget, with_footprint=True)
-        plan[f"layer{li}.act"] = (ip, fp)
-        x = requantize(activation(x, kind="relu", ip=ip.name))
+        x = conv2d(x, w, ip=plan[f"layer{li}.conv"][0].name)
+        x = pool2d(x, window=(2, 2), mode="max",
+                   ip=plan[f"layer{li}.pool"][0].name)
+        x = requantize(activation(x, kind="relu",
+                                  ip=plan[f"layer{li}.act"][0].name))
     return x, plan
 
 
@@ -79,7 +90,7 @@ def main():
         out, plan = run_stack(img, weights, budget)
         results[bname] = np.asarray(out)
         print(f"\n=== budget: {bname} ===")
-        print(describe_plan(plan))
+        print(plan.describe())
         print(f"  output: {out.shape}, sum={int(np.asarray(out).sum())}")
 
     base = results["ample"]
@@ -87,6 +98,16 @@ def main():
         assert np.array_equal(out, base), bname
     print("\nall budgets produced IDENTICAL outputs — adaptation changed "
           "the implementation, not the math. ✓")
+
+    # --- plan cache + JSON artifacts ------------------------------------
+    evals_before = planner_stats().selector_evals
+    replanned = plan_network(stack_site_specs(img.shape), BUDGETS["ample"])
+    assert planner_stats().selector_evals == evals_before
+    assert replanned is plan_network(stack_site_specs(img.shape),
+                                     BUDGETS["ample"])
+    roundtrip = NetworkPlan.from_json(replanned.to_json())
+    assert roundtrip == replanned
+    print("plan cache hit (zero new selector evals) + JSON round-trip. ✓")
 
     # --- Part 2: the precision axis -------------------------------------
     feats = jnp.asarray(rng.normal(0, 2, (2, 10, 10, 32)).astype(np.float32))

@@ -5,6 +5,12 @@ pair.  Here an IP is a callable plus a ``footprint(shape)`` function that
 prices it against the TPU resource vector, plus the static capability
 bits from paper Table I (operand-width ceiling, outputs per pass,
 whether it needs the MXU).
+
+``SiteSpec`` / ``SiteRequest`` are the planner-facing half of the
+contract: a family registers a *site adapter* (``IPFamily.site_adapter``,
+populated in ``core/library.py``) that translates a declarative op site
+— family, shapes, dtype, knobs — into the candidate set and footprint
+arguments the generic selection engine (``core/plan.py``) prices.
 """
 from __future__ import annotations
 
@@ -12,6 +18,72 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.resources import Footprint, ResourceBudget
+
+
+def _freeze(value):
+    """Normalize knob/shape values to hashable, JSON-stable forms."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """One op site of a network graph, declaratively.
+
+    Hashable (it is the planner's cache-key unit) and JSON-serializable.
+    ``shapes`` holds the operand shapes the family adapter expects (e.g.
+    ``(x_shape, w_shape)`` for conv2d); ``knobs`` are the op-level
+    switches (``dual``, ``mode``, ``kind``, ``window``...) as a sorted
+    tuple of pairs so equal specs hash equally.
+    """
+
+    name: str
+    family: str
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtype: str = "float32"
+    knobs: Tuple[Tuple[str, Any], ...] = ()
+
+    @classmethod
+    def make(cls, name: str, family: str, shapes, dtype="float32",
+             **knobs) -> "SiteSpec":
+        import jax.numpy as jnp
+        norm_shapes = tuple(tuple(int(d) for d in s) for s in shapes)
+        norm_knobs = tuple(sorted((k, _freeze(v)) for k, v in knobs.items()))
+        return cls(name=name, family=family, shapes=norm_shapes,
+                   dtype=jnp.dtype(dtype).name, knobs=norm_knobs)
+
+    def knob(self, key: str, default=None):
+        for k, v in self.knobs:
+            if k == key:
+                return v
+        return default
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "family": self.family,
+                "shapes": [list(s) for s in self.shapes],
+                "dtype": self.dtype,
+                "knobs": {k: list(v) if isinstance(v, tuple) else v
+                          for k, v in self.knobs}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SiteSpec":
+        return cls.make(d["name"], d["family"], d["shapes"], d["dtype"],
+                        **d.get("knobs", {}))
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRequest:
+    """What a family's site adapter hands the selection engine: the
+    candidate members to price, the arguments their footprint functions
+    take for this site, and the physical operand width of the caller's
+    data (0 when the member re-encodes on ingest — see
+    docs/adaptive_ips.md)."""
+
+    candidates: Tuple["KernelIP", ...]
+    fp_args: Tuple
+    fp_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    op_bits: int = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +117,27 @@ class KernelIP:
 
 @dataclasses.dataclass
 class IPFamily:
-    """All IPs implementing one op contract (same ref.py oracle)."""
+    """All IPs implementing one op contract (same ref.py oracle).
+
+    ``site_adapter`` makes the family plannable: it maps a ``SiteSpec``
+    to a ``SiteRequest`` so the generic engine in ``core/plan.py`` can
+    select for this family without family-specific code.
+    """
 
     name: str
     members: Dict[str, KernelIP] = dataclasses.field(default_factory=dict)
     reference: Optional[Callable[..., Any]] = None
+    site_adapter: Optional[Callable[[SiteSpec], SiteRequest]] = None
+
+    def plan_site(self, spec: SiteSpec) -> SiteRequest:
+        if spec.family != self.name:
+            raise ValueError(f"site {spec.name!r} is a {spec.family!r} site, "
+                             f"not {self.name!r}")
+        if self.site_adapter is None:
+            raise NotImplementedError(
+                f"family {self.name!r} has no site adapter registered; "
+                "it cannot be planned (see docs/adaptive_ips.md)")
+        return self.site_adapter(spec)
 
     def register(self, ip: KernelIP) -> KernelIP:
         if ip.name in self.members:

@@ -162,6 +162,107 @@ SSM_SCAN.register(KernelIP(
 FAMILIES = {f.name: f for f in (CONV2D, POOL2D, ACTIVATION, MATMUL,
                                 ATTENTION, SSM_SCAN)}
 
+# --------------------------------------------------------------------------
+# Site adapters — what makes each family *plannable*.  An adapter maps a
+# declarative SiteSpec (shapes + dtype + knobs) to the candidate members
+# and footprint arguments the generic engine (core/plan.py) prices; the
+# selection/ranking semantics themselves are family-agnostic.
+# --------------------------------------------------------------------------
+import math  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.ip import SiteRequest, SiteSpec  # noqa: E402
+
+
+def _bits(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def _conv2d_adapter(spec: SiteSpec) -> SiteRequest:
+    x_shape, w_shape = spec.shapes
+    n, h, w_, cin = x_shape
+    kh, kw, _, cout = w_shape
+    want = (("conv2d.ip3_packed", "conv2d.ip4_dual")
+            if spec.knob("dual", False)
+            else ("conv2d.ip1_vpu", "conv2d.ip2_mxu"))
+    return SiteRequest(
+        candidates=tuple(CONV2D[name] for name in want),
+        fp_args=(n, h, w_, cin, kh, kw, cout),
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),),
+        op_bits=_bits(spec.dtype))
+
+
+def _pool2d_adapter(spec: SiteSpec) -> SiteRequest:
+    from repro.kernels.pool2d.ref import check_pool_geometry
+    (x_shape,) = spec.shapes
+    (kh, kw), (sh, sw) = check_pool_geometry(
+        x_shape, spec.knob("window", (2, 2)), spec.knob("stride"))
+    n, h, w_, c = x_shape
+    return SiteRequest(
+        candidates=(POOL2D["pool2d.pool_vpu"], POOL2D["pool2d.pool_im2col"]),
+        fp_args=(n, h, w_, c, kh, kw, sh, sw),
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),
+                   ("mode", spec.knob("mode", "max"))),
+        op_bits=_bits(spec.dtype))
+
+
+def _activation_adapter(spec: SiteSpec) -> SiteRequest:
+    kind = spec.knob("kind", "relu")
+    cands = [ACTIVATION["activation.act_vpu"]]
+    if kind in act_lut_mod.SUPPORTED_KINDS:
+        # capability filter: the LUT is constant-off-range, so only
+        # saturating kinds may offer it
+        cands.append(ACTIVATION["activation.act_lut"])
+    n_elems = int(math.prod(int(d) for d in spec.shapes[0]))
+    # Activation IPs re-encode their input on ingest (the LUT member
+    # quantizes), so the caller's dtype imposes no operand-width floor;
+    # precision demands arrive via budget.precision_bits instead.
+    return SiteRequest(
+        candidates=tuple(cands),
+        fp_args=(n_elems,),
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),
+                   ("kind", kind)),
+        op_bits=0)
+
+
+def _matmul_adapter(spec: SiteSpec) -> SiteRequest:
+    a_shape, b_shape = spec.shapes
+    m, k = a_shape[-2], a_shape[-1]
+    n = b_shape[-1]
+    want = (("matmul.mm_dual_shared", "matmul.mm_dual_full")
+            if spec.knob("dual", False)
+            else ("matmul.mm_vpu", "matmul.mm_mxu"))
+    return SiteRequest(
+        candidates=tuple(MATMUL[name] for name in want),
+        fp_args=(m, k, n),
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),),
+        op_bits=_bits(spec.dtype))
+
+
+def _attention_adapter(spec: SiteSpec) -> SiteRequest:
+    q_shape, kv_shape = spec.shapes
+    b, hq, sq, d = q_shape
+    _, hkv, skv, _ = kv_shape
+    if sq == 1:
+        cands = (ATTENTION["attention.attn_decode"],)
+        args = (b, hq, hkv, skv, d)
+    else:
+        cands = (ATTENTION["attention.attn_naive"],
+                 ATTENTION["attention.attn_flash"])
+        args = (b, hq, hkv, sq, skv, d)
+    return SiteRequest(
+        candidates=cands, fp_args=args,
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),),
+        op_bits=_bits(spec.dtype))
+
+
+CONV2D.site_adapter = _conv2d_adapter
+POOL2D.site_adapter = _pool2d_adapter
+ACTIVATION.site_adapter = _activation_adapter
+MATMUL.site_adapter = _matmul_adapter
+ATTENTION.site_adapter = _attention_adapter
+
 
 def get_family(name: str) -> IPFamily:
     return FAMILIES[name]

@@ -1,0 +1,372 @@
+"""Graph-level network planner — whole-network resource mapping.
+
+The paper selects one IP per op against the available resources; a CNN
+is a *graph* of ops competing for the same envelope.  This module is
+the single selection engine behind every family:
+
+* ``select_ip(family, spec, budget)`` — the generic per-site selector.
+  A family is plannable once it registers a site adapter on its
+  ``IPFamily`` (``core/library.py``); the old ``select_<family>_ip``
+  functions in ``core/selector.py`` are thin shims over this.
+* ``plan_network(specs, budget)`` — maps a list of ``SiteSpec`` sites
+  onto ONE budget by *partitioning* it: each site gets a slice
+  proportional to its estimated cost, with a greedy repair pass that
+  floors every site at the minimal slice its cheapest member needs.
+  This replaces the "every op sees the full budget" fiction the
+  per-call-site selectors lived with.
+* Plans are memoized on ``(graph-key, budget)`` — repeated trace-time
+  calls (e.g. re-tracing ``apply_cnn_block``) are O(1) dict hits with
+  zero new footprint evaluations — and serialize to/from JSON for
+  experiment artifacts.
+
+Everything here is pure trace-time Python: no jax arrays, no jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+from repro.core.ip import IPFamily, KernelIP, SiteSpec
+from repro.core.resources import Footprint, ResourceBudget
+
+_PLAN_CACHE_MAX = 1024
+
+
+@dataclasses.dataclass
+class PlannerStats:
+    """Trace-time observability: how much selection work actually ran."""
+
+    selector_evals: int = 0     # candidate footprints priced by _select
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+STATS = PlannerStats()
+_PLAN_CACHE: Dict[tuple, "NetworkPlan"] = {}
+
+
+def planner_stats() -> PlannerStats:
+    return STATS
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def _get_family(family: Union[str, IPFamily]) -> IPFamily:
+    if isinstance(family, IPFamily):
+        return family
+    from repro.core.library import get_family
+    return get_family(family)
+
+
+# ---------------------------------------------------------------------------
+# The selection engine (moved here from core/selector.py; the shims there
+# keep the old five entry points alive).
+# ---------------------------------------------------------------------------
+def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
+    """Ranking key: (primary cost, tie-breaks). Lower is better."""
+    parallel_bonus = 0
+    if budget.prefer_parallel_streams:
+        parallel_bonus = 0 if fp.outputs_per_pass >= 2 else 1
+    mxu_pressure = 0.0
+    if budget.mxu_passes_budget is not None and budget.mxu_passes_budget > 0:
+        mxu_pressure = fp.mxu_passes / budget.mxu_passes_budget
+    vpu_pressure = 0.0
+    if budget.vpu_ops_budget is not None and budget.vpu_ops_budget > 0:
+        vpu_pressure = fp.vpu_ops / budget.vpu_ops_budget
+    # Normalize per produced output so dual-stream members aren't
+    # penalized for doing two ops' work.
+    cycles = fp.est_cycles / max(fp.outputs_per_pass, 1)
+    return (parallel_bonus, cycles * (1.0 + mxu_pressure + vpu_pressure),
+            fp.vmem_bytes)
+
+
+def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
+            fp_args: tuple, fp_kwargs: dict, op_bits: int):
+    """Returns the winning (KernelIP, Footprint) pair."""
+    feasible = []
+    for ip in candidates:
+        STATS.selector_evals += 1
+        fp = ip.footprint(*fp_args, **fp_kwargs)
+        if op_bits > fp.max_operand_bits:
+            continue
+        if not fp.fits(budget):
+            continue
+        feasible.append((_rank(ip, fp, budget), ip.name, ip, fp))
+    if not feasible:
+        raise ValueError(
+            "no feasible IP under budget "
+            f"{budget} for shape args {fp_args} (operand bits {op_bits}); "
+            f"candidates: {[c.name for c in candidates]}")
+    feasible.sort(key=lambda t: t[:2])
+    return feasible[0][2], feasible[0][3]
+
+
+def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
+              budget: Optional[ResourceBudget] = None,
+              with_footprint: bool = False):
+    """Generic resource-driven selection for one site of any family.
+
+    The family's registered site adapter turns ``spec`` into candidates
+    + footprint arguments; feasibility and ranking are identical for
+    every family (docs/adaptive_ips.md#selection-semantics).
+    """
+    fam = _get_family(family)
+    req = fam.plan_site(spec)
+    budget = budget or ResourceBudget()
+    ip, fp = _select(req.candidates, budget, req.fp_args,
+                     dict(req.fp_kwargs), req.op_bits)
+    return (ip, fp) if with_footprint else ip
+
+
+# ---------------------------------------------------------------------------
+# Network plans
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlannedSite:
+    """One site's resolved decision: the member, its price, and the
+    fraction of the network budget the partitioner granted it."""
+
+    spec: SiteSpec
+    ip: KernelIP
+    footprint: Footprint
+    fraction: float
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """A whole network mapped onto one ResourceBudget.
+
+    Mapping-like: ``plan["layer0.conv"]`` returns the ``(KernelIP,
+    Footprint)`` pair (the same shape the ad-hoc plan dicts used, so
+    ``describe_plan`` renders either).
+    """
+
+    budget: ResourceBudget
+    sites: Tuple[PlannedSite, ...]
+
+    def site(self, name: str) -> PlannedSite:
+        for s in self.sites:
+            if s.spec.name == name:
+                return s
+        raise KeyError(f"no site {name!r} in plan; "
+                       f"have {[s.spec.name for s in self.sites]}")
+
+    def __getitem__(self, name: str):
+        s = self.site(name)
+        return s.ip, s.footprint
+
+    def __contains__(self, name: str) -> bool:
+        return any(s.spec.name == name for s in self.sites)
+
+    def __len__(self) -> int:
+        return len(self.sites)
+
+    def __iter__(self):
+        return (s.spec.name for s in self.sites)
+
+    def items(self):
+        return [(s.spec.name, (s.ip, s.footprint)) for s in self.sites]
+
+    @property
+    def total_cycles(self) -> float:
+        return sum(s.footprint.est_cycles / max(s.footprint.outputs_per_pass, 1)
+                   for s in self.sites)
+
+    def describe(self) -> str:
+        lines = []
+        for s in self.sites:
+            fp = s.footprint
+            lines.append(
+                f"{s.spec.name:<40s} -> {s.ip.name:<28s} "
+                f"frac={s.fraction:5.3f} "
+                f"vmem={fp.vmem_bytes/2**20:7.2f}MiB "
+                f"mxu={fp.mxu_passes:<8d} vpu={fp.vpu_ops:.2e} "
+                f"cyc={fp.est_cycles:.3e}")
+        lines.append(f"{'TOTAL':<40s}    {'':<28s} "
+                     f"cyc={self.total_cycles:.3e}")
+        return "\n".join(lines)
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps({
+            "budget": dataclasses.asdict(self.budget),
+            "sites": [{
+                "spec": s.spec.to_dict(),
+                "ip": s.ip.name,
+                "fraction": s.fraction,
+                "footprint": dataclasses.asdict(s.footprint),
+            } for s in self.sites],
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "NetworkPlan":
+        from repro.core.library import get_ip
+        d = json.loads(text)
+        sites = tuple(PlannedSite(
+            spec=SiteSpec.from_dict(r["spec"]),
+            ip=get_ip(r["ip"]),
+            fraction=float(r["fraction"]),
+            footprint=Footprint(**r["footprint"]),
+        ) for r in d["sites"])
+        return cls(budget=ResourceBudget(**d["budget"]), sites=sites)
+
+
+# ---------------------------------------------------------------------------
+# Budget partitioning
+# ---------------------------------------------------------------------------
+def _min_fraction(fp: Footprint, budget: ResourceBudget) -> float:
+    """Smallest budget fraction under which ``fp`` still fits, given the
+    integer truncation in ``ResourceBudget.scaled`` (the +1 keeps the
+    truncated slice strictly above the requirement)."""
+    ratios = [0.0]
+    if fp.vmem_bytes > 0 and budget.vmem_bytes > 0:
+        ratios.append((fp.vmem_bytes + 1) / budget.vmem_bytes)
+    if fp.hbm_bytes > 0 and budget.hbm_bytes > 0:
+        ratios.append((fp.hbm_bytes + 1) / budget.hbm_bytes)
+    if budget.mxu_passes_budget is not None and fp.mxu_passes > 0:
+        ratios.append((fp.mxu_passes + 1) / budget.mxu_passes_budget)
+    if budget.vpu_ops_budget is not None and fp.vpu_ops > 0:
+        ratios.append((fp.vpu_ops + 1) / budget.vpu_ops_budget)
+    return max(ratios)
+
+
+def _site_need(req, budget: ResourceBudget) -> float:
+    """Minimal fraction at which *some* candidate of this site is
+    feasible (capped at 1.0 — full-budget feasibility is checked
+    separately)."""
+    best = None
+    for ip in req.candidates:
+        STATS.selector_evals += 1
+        fp = ip.footprint(*req.fp_args, **dict(req.fp_kwargs))
+        if req.op_bits > fp.max_operand_bits:
+            continue
+        if not fp.fits(budget):        # full budget: non-scalable gates too
+            continue
+        f = min(_min_fraction(fp, budget), 1.0)
+        best = f if best is None else min(best, f)
+    return 1.0 if best is None else best
+
+
+def plan_network(specs: Iterable[SiteSpec],
+                 budget: Optional[ResourceBudget] = None) -> "NetworkPlan":
+    """Map a network of sites onto one partitioned budget (memoized).
+
+    Partitioning: fractions proportional to each site's cheapest
+    full-budget cost; if any site has no feasible member under its
+    slice, a greedy repair pass floors every site at its minimal
+    feasible fraction and redistributes only the surplus.  Raises the
+    family-standard ``ValueError`` when a site is infeasible even under
+    the full budget, or when the sites' minimal needs exceed the
+    envelope.
+    """
+    budget = budget or ResourceBudget()
+    key = (tuple(specs), budget)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        STATS.plan_hits += 1
+        return cached
+    STATS.plan_misses += 1
+    plan = _plan_uncached(key[0], budget)
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def plan_single(spec: SiteSpec,
+                budget: Optional[ResourceBudget] = None):
+    """One-site plan (the kernels' ``budget=`` path): full budget, same
+    engine, same memoization. Returns the (KernelIP, Footprint) pair."""
+    return plan_network((spec,), budget)[spec.name]
+
+
+def _plan_uncached(specs: Tuple[SiteSpec, ...],
+                   budget: ResourceBudget) -> NetworkPlan:
+    if not specs:
+        return NetworkPlan(budget=budget, sites=())
+    names = [s.name for s in specs]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate site names in network: {dupes}")
+
+    reqs = [_get_family(s.family).plan_site(s) for s in specs]
+
+    # 1) Full-budget baseline: cost shares (raises "no feasible IP" for a
+    #    site that cannot run even with everything).
+    base = [_select(r.candidates, budget, r.fp_args, dict(r.fp_kwargs),
+                    r.op_bits) for r in reqs]
+    costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp in base]
+    total_cost = sum(costs) or 1.0
+    fractions = [c / total_cost for c in costs]
+
+    def try_assign(fracs):
+        planned, failed = [], []
+        for spec, req, frac in zip(specs, reqs, fracs):
+            try:
+                ip, fp = _select(req.candidates, budget.scaled(frac),
+                                 req.fp_args, dict(req.fp_kwargs),
+                                 req.op_bits)
+                planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
+                                           fraction=frac))
+            except ValueError:
+                planned.append(None)
+                failed.append(spec.name)
+        return planned, failed
+
+    planned, failed = try_assign(fractions)
+    if failed:
+        # 2) Greedy repair: floor each site at the minimal slice its
+        #    cheapest member needs; only the surplus follows cost shares.
+        needs = [_site_need(r, budget) for r in reqs]
+        total_need = sum(needs)
+        if total_need > 1.0 + 1e-9:
+            raise ValueError(
+                f"no feasible network plan under budget {budget}: sites "
+                f"{names} jointly need {total_need:.3f}x the envelope "
+                f"(per-site minima {['%.3f' % n for n in needs]})")
+        surplus = 1.0 - total_need
+        fractions = [need + surplus * (c / total_cost)
+                     for need, c in zip(needs, costs)]
+        planned, failed = try_assign(fractions)
+        if failed:  # pragma: no cover — needs floor guarantees feasibility
+            raise ValueError(
+                f"budget partition repair failed for sites {failed} under "
+                f"{budget}")
+    return NetworkPlan(budget=budget, sites=tuple(planned))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-IP baselines (benchmarks/table3): price a fixed family->member
+# assignment over the same sites the planner maps.
+# ---------------------------------------------------------------------------
+def fixed_network_cost(specs: Iterable[SiteSpec],
+                       members: Dict[str, str],
+                       budget: Optional[ResourceBudget] = None):
+    """Total est-cycles of a fixed assignment, or None if any site is
+    infeasible.  Each site is generously priced against the FULL budget
+    (no partitioning) — the planner has to win despite that handicap.
+
+    ``members`` maps family name -> member name (short or qualified).
+    """
+    budget = budget or ResourceBudget()
+    total = 0.0
+    for spec in specs:
+        fam = _get_family(spec.family)
+        req = fam.plan_site(spec)
+        want = members[spec.family]
+        cands = {c.name: c for c in req.candidates}
+        qual = want if "." in want else f"{spec.family}.{want}"
+        ip = cands.get(qual)
+        if ip is None:      # member not even a candidate for this site
+            return None
+        fp = ip.footprint(*req.fp_args, **dict(req.fp_kwargs))
+        if req.op_bits > fp.max_operand_bits or not fp.fits(budget):
+            return None
+        total += fp.est_cycles / max(fp.outputs_per_pass, 1)
+    return total

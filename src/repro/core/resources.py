@@ -52,11 +52,24 @@ class ResourceBudget:
     prefer_parallel_streams: bool = False     # paper: "demand high parallelism"
 
     def scaled(self, fraction: float) -> "ResourceBudget":
-        """A fractional slice of this budget (e.g. per co-resident op)."""
+        """A fractional slice of this budget (e.g. per co-resident op).
+
+        Every *quantitative* column scales — capacity (vmem/hbm) and the
+        optional pass/op ceilings alike; the qualitative knobs
+        (mxu_available, precision_bits, prefer_parallel_streams) describe
+        the deployment, not an amount, and pass through unchanged.  The
+        network planner's budget partitioning depends on the ceilings
+        scaling with the slice.
+        """
+        def _slice(v):
+            return None if v is None else int(v * fraction)
+
         return dataclasses.replace(
             self,
             vmem_bytes=int(self.vmem_bytes * fraction),
             hbm_bytes=int(self.hbm_bytes * fraction),
+            mxu_passes_budget=_slice(self.mxu_passes_budget),
+            vpu_ops_budget=_slice(self.vpu_ops_budget),
         )
 
 

@@ -1,177 +1,83 @@
-"""Resource-driven IP selection — the paper's thesis as code.
+"""Resource-driven IP selection — compatibility shims over the engine.
 
-Given the op, the concrete shape, and a ResourceBudget (the "available
-FPGA resources"), pick the library member that (a) is *feasible* under
-the budget — fits VMEM, respects the precision ceiling, does not touch
-the MXU if the MXU is spoken for — and (b) minimizes estimated cycles
-among the feasible set, with the paper's tie-breaks:
+The selection engine (feasibility + the paper's tie-break ranking) now
+lives in ``core/plan.py`` as one generic ``select_ip(family, spec,
+budget)`` driven by the per-family site adapters registered in
+``core/library.py``.  The five historical per-family entry points below
+are thin shims that build a ``SiteSpec`` and defer — kept because they
+are a pleasant calling convention at a single call site; anything
+mapping more than one op should build a ``NetworkPlan``
+(``core/plan.py::plan_network``) so the ops share a partitioned budget
+instead of each seeing the full one.
 
-  * prefer_parallel_streams -> prefer outputs_per_pass==2 (Conv3/Conv4);
-  * a tight mxu_passes_budget prefers fewer MXU passes (Conv1/Conv3);
-  * a tight vpu_ops_budget prefers DSP-style members (Conv2/Conv4).
-
-This module is deliberately small and pure: it is called at trace time
-(never inside jit) and returns a KernelIP whose `.impl` the caller then
-invokes directly (see the per-family ``kernels/<family>/ops.py``
-wrappers) or records into a plan rendered by ``describe_plan``.
+All of this is trace-time Python (never inside jit): callers invoke the
+returned KernelIP's ``.impl`` directly (see the per-family
+``kernels/<family>/ops.py`` wrappers) or record it into a plan rendered
+by ``describe_plan``.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.ip import KernelIP
-from repro.core.library import ACTIVATION, ATTENTION, CONV2D, MATMUL, POOL2D
-from repro.core.resources import Footprint, ResourceBudget
+from repro.core.ip import SiteSpec
+from repro.core.plan import select_ip
+from repro.core.resources import ResourceBudget
 
 
-def _dtype_bits(dtype) -> int:
-    return jnp.dtype(dtype).itemsize * 8
-
-
-def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
-    """Ranking key: (primary cost, tie-breaks). Lower is better."""
-    parallel_bonus = 0
-    if budget.prefer_parallel_streams:
-        parallel_bonus = 0 if fp.outputs_per_pass >= 2 else 1
-    mxu_pressure = 0.0
-    if budget.mxu_passes_budget is not None and budget.mxu_passes_budget > 0:
-        mxu_pressure = fp.mxu_passes / budget.mxu_passes_budget
-    vpu_pressure = 0.0
-    if budget.vpu_ops_budget is not None and budget.vpu_ops_budget > 0:
-        vpu_pressure = fp.vpu_ops / budget.vpu_ops_budget
-    # Normalize per produced output so dual-stream members aren't
-    # penalized for doing two ops' work.
-    cycles = fp.est_cycles / max(fp.outputs_per_pass, 1)
-    return (parallel_bonus, cycles * (1.0 + mxu_pressure + vpu_pressure),
-            fp.vmem_bytes)
-
-
-def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
-            fp_args: tuple, fp_kwargs: dict, op_bits: int):
-    """Returns the winning (KernelIP, Footprint) pair."""
-    feasible = []
-    for ip in candidates:
-        fp = ip.footprint(*fp_args, **fp_kwargs)
-        if op_bits > fp.max_operand_bits:
-            continue
-        if not fp.fits(budget):
-            continue
-        feasible.append((_rank(ip, fp, budget), ip.name, ip, fp))
-    if not feasible:
-        raise ValueError(
-            "no feasible IP under budget "
-            f"{budget} for shape args {fp_args} (operand bits {op_bits}); "
-            f"candidates: {[c.name for c in candidates]}")
-    feasible.sort(key=lambda t: t[:2])
-    return feasible[0][2], feasible[0][3]
-
-
-# --------------------------------------------------------------------------
-# conv2d
-# --------------------------------------------------------------------------
 def select_conv_ip(x_shape, w_shape, *, dual: bool, dtype=jnp.int8,
                    budget: Optional[ResourceBudget] = None,
                    with_footprint: bool = False):
-    budget = budget or ResourceBudget()
-    n, h, w_, cin = x_shape
-    kh, kw, _, cout = w_shape
-    itemsize = jnp.dtype(dtype).itemsize
-    want = {True: ("conv2d.ip3_packed", "conv2d.ip4_dual"),
-            False: ("conv2d.ip1_vpu", "conv2d.ip2_mxu")}[dual]
-    cands = [CONV2D[name] for name in want]
-    ip, fp = _select(cands, budget, (n, h, w_, cin, kh, kw, cout),
-                     {"itemsize": itemsize}, op_bits=_dtype_bits(dtype))
-    return (ip, fp) if with_footprint else ip
+    spec = SiteSpec.make("conv2d", "conv2d", (x_shape, w_shape), dtype,
+                         dual=dual)
+    return select_ip("conv2d", spec, budget=budget,
+                     with_footprint=with_footprint)
 
 
-# --------------------------------------------------------------------------
-# pool2d
-# --------------------------------------------------------------------------
 def select_pool_ip(x_shape, *, window=(2, 2), stride=None, mode: str = "max",
                    dtype=jnp.int8,
                    budget: Optional[ResourceBudget] = None,
                    with_footprint: bool = False):
-    from repro.kernels.pool2d.ref import check_pool_geometry
-
-    budget = budget or ResourceBudget()
-    (kh, kw), (sh, sw) = check_pool_geometry(x_shape, window, stride)
-    n, h, w_, c = x_shape
-    itemsize = jnp.dtype(dtype).itemsize
-    cands = [POOL2D["pool2d.pool_vpu"], POOL2D["pool2d.pool_im2col"]]
-    ip, fp = _select(cands, budget, (n, h, w_, c, kh, kw, sh, sw),
-                     {"itemsize": itemsize, "mode": mode},
-                     op_bits=_dtype_bits(dtype))
-    return (ip, fp) if with_footprint else ip
+    spec = SiteSpec.make("pool2d", "pool2d", (x_shape,), dtype,
+                         window=window, stride=stride, mode=mode)
+    return select_ip("pool2d", spec, budget=budget,
+                     with_footprint=with_footprint)
 
 
-# --------------------------------------------------------------------------
-# activation
-# --------------------------------------------------------------------------
 def select_activation_ip(x_shape, *, kind: str = "relu", dtype=jnp.float32,
                          budget: Optional[ResourceBudget] = None,
                          with_footprint: bool = False):
-    from repro.kernels.activation.lut_poly import SUPPORTED_KINDS as LUT_KINDS
-
-    budget = budget or ResourceBudget()
-    n_elems = int(math.prod(int(d) for d in x_shape))
-    itemsize = jnp.dtype(dtype).itemsize
-    cands = [ACTIVATION["activation.act_vpu"]]
-    if kind in LUT_KINDS:   # capability filter: LUT is constant-off-range
-        cands.append(ACTIVATION["activation.act_lut"])
-    # Activation IPs re-encode their input (the LUT member quantizes on
-    # ingest), so the caller's dtype imposes no operand-width floor; the
-    # precision the deployment demands is budget.precision_bits, which
-    # Footprint.fits checks against each member's 8/32-bit ceiling.
-    ip, fp = _select(cands, budget, (n_elems,),
-                     {"itemsize": itemsize, "kind": kind}, op_bits=0)
-    return (ip, fp) if with_footprint else ip
+    spec = SiteSpec.make("activation", "activation", (x_shape,), dtype,
+                         kind=kind)
+    return select_ip("activation", spec, budget=budget,
+                     with_footprint=with_footprint)
 
 
-# --------------------------------------------------------------------------
-# matmul
-# --------------------------------------------------------------------------
 def select_matmul_ip(a_shape, b_shape, *, dual: bool, dtype=jnp.bfloat16,
                      budget: Optional[ResourceBudget] = None,
                      with_footprint: bool = False):
-    budget = budget or ResourceBudget()
-    m, k = a_shape[-2], a_shape[-1]
-    n = b_shape[-1]
-    itemsize = jnp.dtype(dtype).itemsize
-    want = {True: ("matmul.mm_dual_shared", "matmul.mm_dual_full"),
-            False: ("matmul.mm_vpu", "matmul.mm_mxu")}[dual]
-    cands = [MATMUL[name] for name in want]
-    ip, fp = _select(cands, budget, (m, k, n), {"itemsize": itemsize},
-                     op_bits=_dtype_bits(dtype))
-    return (ip, fp) if with_footprint else ip
+    spec = SiteSpec.make("matmul", "matmul", (a_shape, b_shape), dtype,
+                         dual=dual)
+    return select_ip("matmul", spec, budget=budget,
+                     with_footprint=with_footprint)
 
 
-# --------------------------------------------------------------------------
-# attention
-# --------------------------------------------------------------------------
 def select_attention_ip(q_shape, kv_shape, *,
                         budget: Optional[ResourceBudget] = None,
                         dtype=jnp.bfloat16, with_footprint: bool = False):
-    budget = budget or ResourceBudget()
-    b, hq, sq, d = q_shape
-    _, hkv, skv, _ = kv_shape
-    itemsize = jnp.dtype(dtype).itemsize
-    if sq == 1:
-        cands = [ATTENTION["attention.attn_decode"]]
-        args = (b, hq, hkv, skv, d)
-    else:
-        cands = [ATTENTION["attention.attn_naive"],
-                 ATTENTION["attention.attn_flash"]]
-        args = (b, hq, hkv, sq, skv, d)
-    ip, fp = _select(cands, budget, args, {"itemsize": itemsize},
-                     op_bits=_dtype_bits(dtype))
-    return (ip, fp) if with_footprint else ip
+    spec = SiteSpec.make("attention", "attention", (q_shape, kv_shape), dtype)
+    return select_ip("attention", spec, budget=budget,
+                     with_footprint=with_footprint)
 
 
 def describe_plan(plan) -> str:
-    """Render a layer->IP assignment map (used by examples & benches)."""
+    """Render a layer->IP assignment map (used by examples & benches).
+
+    Accepts either an ad-hoc ``{site: (ip, fp)}`` dict or a
+    ``NetworkPlan`` (whose ``.describe()`` additionally shows the budget
+    fraction each site was granted).
+    """
     lines = []
     for site, (ip, fp) in plan.items():
         lines.append(f"{site:<40s} -> {ip.name:<28s} "

@@ -25,7 +25,9 @@ def ring_all_reduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     Exists to make the ring schedule explicit/controllable (chunked
     issue = overlap window); tests assert equality with psum.
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size doesn't exist on jax<=0.4.x; psum of a literal 1
+    # folds to the (static) axis size on every version.
+    n = jax.lax.psum(1, axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)

@@ -23,9 +23,11 @@ def activation(x: jnp.ndarray, *, kind: str = "relu",
                interpret: bool = True) -> jnp.ndarray:
     """Elementwise activation through a selected IP (Act1/Act2)."""
     if ip is None:
-        from repro.core.selector import select_activation_ip
-        ip = select_activation_ip(x.shape, kind=kind, dtype=x.dtype,
-                                  budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("activation", "activation", (x.shape,),
+                             x.dtype, kind=kind)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     if ip not in _MEMBERS:
         raise KeyError(

@@ -15,9 +15,11 @@ def attention(q, k, v, *, causal: bool = True, ip: Optional[str] = None,
               budget: Optional[ResourceBudget] = None,
               interpret: bool = True):
     if ip is None:
-        from repro.core.selector import select_attention_ip
-        ip = select_attention_ip(q.shape, k.shape,
-                                 budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("attention", "attention", (q.shape, k.shape),
+                             q.dtype)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     if ip == "attn_flash":
         return flash_attention(q, k, v, causal=causal, interpret=interpret)

@@ -25,10 +25,11 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
            interpret: bool = True) -> jnp.ndarray:
     """Single-stream convolution through a selected IP (Conv1/Conv2)."""
     if ip is None:
-        from repro.core.selector import select_conv_ip
-        ip = select_conv_ip(x.shape, w.shape, dual=False,
-                            dtype=x.dtype,
-                            budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("conv2d", "conv2d", (x.shape, w.shape),
+                             x.dtype, dual=False)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     if ip not in _SINGLE:
         raise KeyError(f"{ip!r} is not a single-stream conv IP "
@@ -42,10 +43,11 @@ def conv2d_dual(xa: jnp.ndarray, xb: jnp.ndarray, w: jnp.ndarray, *,
                 interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Two parallel convolutions through a selected IP (Conv3/Conv4)."""
     if ip is None:
-        from repro.core.selector import select_conv_ip
-        ip = select_conv_ip(xa.shape, w.shape, dual=True,
-                            dtype=xa.dtype,
-                            budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("conv2d", "conv2d", (xa.shape, w.shape),
+                             xa.dtype, dual=True)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     if ip not in _DUAL:
         raise KeyError(f"{ip!r} is not a dual-stream conv IP "

@@ -30,19 +30,23 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
     h_ref[...] = jnp.zeros_like(h_ref)
 
     def step(t, _):
-        x_t = pl.load(x_ref, (0, pl.dslice(t, 1), slice(None)))[0]   # (bdi,)
-        dt_t = pl.load(dt_ref, (0, pl.dslice(t, 1), slice(None)))[0]
-        b_t = pl.load(b_ref, (0, pl.dslice(t, 1), slice(None)))[0]   # (Ds,)
-        c_t = pl.load(c_ref, (0, pl.dslice(t, 1), slice(None)))[0]
+        # NB: all-slice indices only — a bare int here breaks interpret-mode
+        # state discharge on jax 0.4.x (`'int' object has no attribute
+        # 'shape'` in _load_discharge_rule).
+        tsl = (slice(None), pl.dslice(t, 1), slice(None))
+        x_t = pl.load(x_ref, tsl)[0, 0]    # (bdi,)
+        dt_t = pl.load(dt_ref, tsl)[0, 0]
+        b_t = pl.load(b_ref, tsl)[0, 0]    # (Ds,)
+        c_t = pl.load(c_ref, tsl)[0, 0]
         dA = jnp.exp(dt_t[:, None] * a_ref[...])                     # (bdi,Ds)
         dBx = (dt_t * x_t)[:, None] * b_t[None, :]
         h_ref[...] = dA * h_ref[...] + dBx
         y_t = jnp.sum(h_ref[...] * c_t[None, :], axis=1)             # (bdi,)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y_t[None])
+        pl.store(y_ref, tsl, y_t[None, None])
         return 0
 
     jax.lax.fori_loop(0, T, step, 0)
-    hout_ref[0] = h_ref[...]
+    hout_ref[...] = h_ref[...][None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_di", "interpret"))

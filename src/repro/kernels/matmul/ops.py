@@ -17,9 +17,11 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, ip: Optional[str] = None,
            budget: Optional[ResourceBudget] = None,
            interpret: bool = True, **tile_kwargs) -> jnp.ndarray:
     if ip is None:
-        from repro.core.selector import select_matmul_ip
-        ip = select_matmul_ip(a.shape, b.shape, dual=False, dtype=a.dtype,
-                              budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("matmul", "matmul", (a.shape, b.shape),
+                             a.dtype, dual=False)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     return _SINGLE[ip](a, b, interpret=interpret, **tile_kwargs)
 
@@ -29,8 +31,10 @@ def matmul_dual(a1: jnp.ndarray, a2: jnp.ndarray, b: jnp.ndarray, *,
                 budget: Optional[ResourceBudget] = None,
                 interpret: bool = True, **tile_kwargs):
     if ip is None:
-        from repro.core.selector import select_matmul_ip
-        ip = select_matmul_ip(a1.shape, b.shape, dual=True, dtype=a1.dtype,
-                              budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("matmul", "matmul", (a1.shape, b.shape),
+                             a1.dtype, dual=True)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     return _DUAL[ip](a1, a2, b, interpret=interpret, **tile_kwargs)

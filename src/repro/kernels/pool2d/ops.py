@@ -27,10 +27,11 @@ def pool2d(x: jnp.ndarray, *, window=(2, 2), stride=None, mode: str = "max",
         raise ValueError(f"unknown pool mode {mode!r}; have ('max', 'avg')")
     window, stride = check_pool_geometry(x.shape, window, stride)
     if ip is None:
-        from repro.core.selector import select_pool_ip
-        ip = select_pool_ip(x.shape, window=window, stride=stride, mode=mode,
-                            dtype=x.dtype,
-                            budget=budget or ResourceBudget()).name
+        from repro.core.ip import SiteSpec
+        from repro.core.plan import plan_single
+        spec = SiteSpec.make("pool2d", "pool2d", (x.shape,), x.dtype,
+                             window=window, stride=stride, mode=mode)
+        ip = plan_single(spec, budget)[0].name
     ip = ip.split(".")[-1]
     if ip not in _MEMBERS:
         raise KeyError(f"{ip!r} is not a pool2d IP (have {sorted(_MEMBERS)})")

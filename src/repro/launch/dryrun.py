@@ -110,6 +110,8 @@ def _compile_and_measure(cfg, shape_name: str, mesh, policy):
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # jax<=0.4.x: one dict per device
+            cost = cost[0] if cost else {}
         try:
             mem = compiled.memory_analysis()
             mem_d = {

@@ -126,10 +126,10 @@ def apply_rope(cfg: ModelConfig, x, cos, sin):
 
 
 # ---------------------------------------------------------------------------
-# CNN block — conv -> pool -> activation, every op dispatched through the
-# resource-driven selector under ONE ResourceBudget (the paper's full-layer
-# scenario: a CNN layer whose implementation adapts to available resources
-# while its math stays fixed).
+# CNN block — conv -> pool -> activation, planned as one NetworkPlan: the
+# three sites share ONE ResourceBudget *partitioned* across them (the
+# paper's full-layer scenario: a CNN layer whose implementation adapts to
+# available resources while its math stays fixed).
 # ---------------------------------------------------------------------------
 def init_cnn_block(key, cin: int, cout: int, k: int = 3,
                    dtype=jnp.float32):
@@ -138,42 +138,96 @@ def init_cnn_block(key, cin: int, cout: int, k: int = 3,
                   ).astype(dtype)}
 
 
+def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
+                         pool_window=(2, 2), pool_stride=None,
+                         pool_mode: str = "max", activation: str = "relu",
+                         site: str = "cnn_block"):
+    """Declarative op sites of one conv -> pool -> act block.
+
+    Intermediate shapes/dtypes come from the family oracles via
+    ``jax.eval_shape`` (abstract, no FLOPs), so the specs always agree
+    with what the kernels will actually produce.  Returns
+    ``(specs, out_aval)`` — the latter lets a caller chain blocks into a
+    single whole-network plan (see models/frontends.py).
+    """
+    import functools
+
+    from repro.core.ip import SiteSpec
+    from repro.kernels.activation.ref import activation_ref
+    from repro.kernels.conv2d.ref import conv2d_ref
+    from repro.kernels.pool2d.ref import pool2d_ref
+
+    x_aval = jax.ShapeDtypeStruct(tuple(x_shape), jnp.dtype(x_dtype))
+    w_aval = jax.ShapeDtypeStruct(tuple(w_shape),
+                                  jnp.dtype(w_dtype or x_dtype))
+    conv_aval = jax.eval_shape(conv2d_ref, x_aval, w_aval)
+    pool_aval = jax.eval_shape(
+        functools.partial(pool2d_ref, window=pool_window, stride=pool_stride,
+                          mode=pool_mode), conv_aval)
+    act_aval = jax.eval_shape(
+        functools.partial(activation_ref, kind=activation), pool_aval)
+    specs = [
+        SiteSpec.make(f"{site}.conv", "conv2d", (x_aval.shape, w_aval.shape),
+                      x_aval.dtype, dual=False),
+        SiteSpec.make(f"{site}.pool", "pool2d", (conv_aval.shape,),
+                      conv_aval.dtype, window=pool_window,
+                      stride=pool_stride, mode=pool_mode),
+        SiteSpec.make(f"{site}.act", "activation", (pool_aval.shape,),
+                      pool_aval.dtype, kind=activation),
+    ]
+    return specs, act_aval
+
+
 def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     pool_stride=None, pool_mode: str = "max",
                     activation: str = "relu", interpret: bool = True,
-                    plan=None, site: str = "cnn_block"):
+                    plan=None, site: str = "cnn_block", network=None):
     """One adaptive CNN layer: conv -> pool -> activation.
 
-    Each stage asks the selector for the cheapest feasible IP under
-    ``budget`` and runs the selected Pallas kernel.  When ``plan`` (a
-    dict) is passed, the three (KernelIP, Footprint) decisions are
-    recorded under ``site`` — renderable with ``describe_plan``.
+    The three sites are planned as one ``NetworkPlan`` under a
+    partitioned ``budget`` (memoized — re-tracing the same shapes hits
+    the plan cache with zero new selector evaluations), then each stage
+    runs its planned Pallas kernel.  Pass ``network`` (a NetworkPlan
+    containing this block's sites, e.g. one spanning a whole frontend)
+    to execute from an outer plan instead.  When ``plan`` (a dict) is
+    passed, the three (KernelIP, Footprint) decisions are recorded
+    under ``site`` — renderable with ``describe_plan``.
     """
-    from repro.core.resources import ResourceBudget
-    from repro.core.selector import (select_activation_ip, select_conv_ip,
-                                     select_pool_ip)
+    from repro.core.plan import plan_network
     from repro.kernels.activation.ops import activation as activation_op
     from repro.kernels.conv2d.ops import conv2d
     from repro.kernels.pool2d.ops import pool2d
 
-    budget = budget or ResourceBudget()
+    specs, _ = cnn_block_site_specs(
+        x.shape, p["w"].shape, x_dtype=x.dtype, w_dtype=p["w"].dtype,
+        pool_window=pool_window, pool_stride=pool_stride,
+        pool_mode=pool_mode, activation=activation, site=site)
+    if network is None:
+        network = plan_network(specs, budget)
+    else:
+        # An outer plan was built from its own view of the graph; its
+        # feasibility guarantees are void if that view disagrees with
+        # this call's actual shapes/dtypes/knobs.
+        for spec in specs:
+            planned = network.site(spec.name).spec
+            if planned != spec:
+                raise ValueError(
+                    f"plan/site mismatch at {spec.name!r}: the supplied "
+                    f"network was planned for {planned}, but this call "
+                    f"executes {spec}")
 
-    ip, fp = select_conv_ip(x.shape, p["w"].shape, dual=False, dtype=x.dtype,
-                            budget=budget, with_footprint=True)
+    ip, fp = network[f"{site}.conv"]
     if plan is not None:
         plan[f"{site}.conv"] = (ip, fp)
     y = conv2d(x, p["w"], ip=ip.name, interpret=interpret)
 
-    ip, fp = select_pool_ip(y.shape, window=pool_window, stride=pool_stride,
-                            mode=pool_mode, dtype=y.dtype, budget=budget,
-                            with_footprint=True)
+    ip, fp = network[f"{site}.pool"]
     if plan is not None:
         plan[f"{site}.pool"] = (ip, fp)
     y = pool2d(y, window=pool_window, stride=pool_stride, mode=pool_mode,
                ip=ip.name, interpret=interpret)
 
-    ip, fp = select_activation_ip(y.shape, kind=activation, dtype=y.dtype,
-                                  budget=budget, with_footprint=True)
+    ip, fp = network[f"{site}.act"]
     if plan is not None:
         plan[f"{site}.act"] = (ip, fp)
     return activation_op(y, kind=activation, ip=ip.name, interpret=interpret)

@@ -66,16 +66,45 @@ def init_cnn_frontend(key, *, channels=(3, 16, 32), k: int = 3,
     return {"blocks": blocks, "proj": proj}
 
 
+def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
+                            pool_window=(2, 2), activation: str = "relu"):
+    """All op sites of the frontend stack, chained by abstract shapes —
+    the whole-network graph the planner partitions one budget across."""
+    from repro.models.blocks import cnn_block_site_specs
+    specs = []
+    shape, dtype = tuple(image_shape), image_dtype
+    for li, bp in enumerate(p["blocks"]):
+        block_specs, out_aval = cnn_block_site_specs(
+            shape, bp["w"].shape, x_dtype=dtype, w_dtype=bp["w"].dtype,
+            pool_window=pool_window, activation=activation,
+            site=f"frontend.block{li}")
+        specs.extend(block_specs)
+        shape, dtype = out_aval.shape, out_aval.dtype
+    return specs
+
+
 def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
                        activation: str = "relu", interpret: bool = True,
                        plan=None):
-    """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model)."""
+    """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model).
+
+    The entire stack (every conv/pool/act of every block) is planned as
+    ONE NetworkPlan: the budget is partitioned across all sites at once
+    rather than each block competing for the full envelope.
+    """
+    from repro.core.plan import plan_network
     from repro.models.blocks import apply_cnn_block
+    network = plan_network(
+        cnn_frontend_site_specs(p, images.shape, images.dtype,
+                                pool_window=pool_window,
+                                activation=activation),
+        budget)
     x = images
     for li, bp in enumerate(p["blocks"]):
-        x = apply_cnn_block(bp, x, budget=budget, pool_window=pool_window,
+        x = apply_cnn_block(bp, x, pool_window=pool_window,
                             activation=activation, interpret=interpret,
-                            plan=plan, site=f"frontend.block{li}")
+                            plan=plan, site=f"frontend.block{li}",
+                            network=network)
     b, h, w, c = x.shape
     tokens = x.reshape(b, h * w, c)
     return jnp.einsum("bsc,cd->bsd", tokens, p["proj"].astype(x.dtype))
