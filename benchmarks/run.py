@@ -8,6 +8,9 @@ Paper tables (the reproduction targets):
   table3_comparison          — Table III: adaptive selection vs fixed-IP
       baselines across resource budgets (the paper's adaptability claim,
       made quantitative)
+  table_precision            — the precision ladder: f32-only vs
+      ladder-planned networks across the budget ladder (planned cycles,
+      measured wall time, and per-site quantization error)
 
 System benches:
   bench_kernels     — us/call for every kernel family member
@@ -159,6 +162,99 @@ def table3_comparison():
 
 
 # ---------------------------------------------------------------------------
+# Table P — the precision ladder, network-level: the same float32 CNN is
+# planned twice per budget — once at f32 only, once with a (16, 8) ladder
+# on every site — and the ladder plan is EXECUTED end-to-end so every
+# lowered site reports its measured error against the family oracles.
+# ---------------------------------------------------------------------------
+PRECISION_LADDER = (16, 8)
+
+
+def precision_network_specs(ladder=(), n=2, hw=32):
+    from repro.models.blocks import cnn_block_site_specs
+    specs = []
+    shape = (n, hw, hw, TABLE3_LAYERS[0][0])
+    for li, (cin, cout) in enumerate(TABLE3_LAYERS):
+        layer, out = cnn_block_site_specs(
+            shape, (3, 3, cin, cout), x_dtype="float32", pool_mode="max",
+            activation="relu", site=f"layer{li}", ladder=ladder)
+        specs += layer
+        shape = out.shape
+    return specs
+
+
+def _run_precision_network(weights, x, network, ladder):
+    from repro.models.blocks import apply_cnn_block
+    report = {}
+    y = x
+    for li, w in enumerate(weights):
+        y = apply_cnn_block({"w": w}, y, pool_mode="max", activation="relu",
+                            site=f"layer{li}", network=network,
+                            ladder=ladder, quant_report=report)
+    return y, report
+
+
+def table_precision():
+    from repro.core.plan import plan_network
+    from repro.core.resources import ResourceBudget
+    from repro.quant.report import max_rel_error
+    print("# Table P — precision ladder: f32-only vs ladder-planned "
+          "network per budget; cycles planned, us measured (interpret "
+          "mode), err = max per-site rel error of the executed ladder "
+          "plan vs the f32 oracles; x=infeasible")
+    budgets = {
+        # ladder never engages; plans identical
+        "ample": ResourceBudget(),
+        # partitioned slices push sites down the ladder; the lowered
+        # plan is strictly CHEAPER (narrower operands = less traffic)
+        # while f32-only still fits
+        "vmem_600KiB": ResourceBudget(vmem_bytes=600 * 1024),
+        # f32-only is infeasible; only the ladder plan exists
+        "vmem_280KiB": ResourceBudget(vmem_bytes=280 * 1024),
+        # below every rung: both plans infeasible (honest envelope end)
+        "vmem_160KiB": ResourceBudget(vmem_bytes=160 * 1024),
+    }
+    rng = np.random.default_rng(0)
+    weights = [jnp.asarray(rng.normal(0, (3 * 3 * cin) ** -0.5,
+                                      (3, 3, cin, cout)).astype(np.float32))
+               for cin, cout in TABLE3_LAYERS]
+    x = jnp.asarray(rng.normal(size=(2, 32, 32, 8)).astype(np.float32))
+    specs_f32 = precision_network_specs()
+    specs_lad = precision_network_specs(PRECISION_LADDER)
+    for bname, budget in budgets.items():
+        try:
+            f32_cycles = plan_network(specs_f32, budget).total_cycles
+        except ValueError:
+            f32_cycles = None
+        try:
+            lad_plan = plan_network(specs_lad, budget)
+        except ValueError:
+            lad_plan = None
+        if lad_plan is None:
+            emit(f"table_precision.budget_{bname}", 0.0,
+                 ("f32=x;" if f32_cycles is None
+                  else f"f32={f32_cycles:.3e};") + "ladder=x")
+            continue
+        us = _timeit(lambda: _run_precision_network(
+            weights, x, lad_plan, PRECISION_LADDER)[0])
+        _, report = _run_precision_network(weights, x, lad_plan,
+                                           PRECISION_LADDER)
+        lowered = lad_plan.lowered_sites()
+        bits = "|".join(f"{s.spec.name}:{s.precision_bits}"
+                        for s in lowered) or "none"
+        err = max_rel_error(report)
+        wins = f32_cycles is None or lad_plan.total_cycles < f32_cycles
+        derived = (("f32=x" if f32_cycles is None
+                    else f"f32={f32_cycles:.3e}")
+                   + f";ladder={lad_plan.total_cycles:.3e}"
+                   + f";lowered={len(lowered)};bits={bits}"
+                   + f";max_rel_err={err:.3e}"
+                   + f";err_ok={int(err <= 5e-2)}"
+                   + f";ladder_wins={int(wins)}")
+        emit(f"table_precision.budget_{bname}", us, derived)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 def bench_kernels():
@@ -192,8 +288,8 @@ def bench_kernels():
 def bench_quantize():
     """Fixed-point (paper discipline) on the LM path: w8a8 accuracy +
     the wire/HBM savings it buys."""
-    from repro.core.quantize import (int8_matmul, quantization_error,
-                                     quantize_weights)
+    from repro.quant import (int8_matmul, quantization_error,
+                             quantize_weights)
     print("# w8a8 fixed-point path (paper's 8-bit discipline on matmul)")
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(64, 512)).astype(np.float32))
@@ -255,6 +351,7 @@ BENCHES = {
     "table1": table1_ip_characteristics,
     "table2": table2_resource_utilization,
     "table3": table3_comparison,
+    "table_precision": table_precision,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
     "train_step": bench_train_step,

@@ -5,6 +5,11 @@ train/decode shapes are mapped by one ``plan_network`` call — the four
 sites share the envelope (partitioned proportional-to-cost with greedy
 repair) instead of each seeing the full budget.
 
+The FFN site carries a precision *ladder* (it may drop to w8a8): each
+cell prints ``member@bits``, and a trailing ``*`` marks sites the
+planner lowered below their native width to make the network fit —
+the ladder engaging is visible per budget.
+
     PYTHONPATH=src python examples/budget_sweep.py
 """
 import sys
@@ -23,6 +28,7 @@ BUDGETS = {
     "ample": ResourceBudget(),
     "no_mxu": ResourceBudget(mxu_available=False),
     "vmem_16MiB": ResourceBudget(vmem_bytes=16 * 2**20),
+    "vmem_6MiB": ResourceBudget(vmem_bytes=6 * 2**20),
     "int8_parallel": ResourceBudget(precision_bits=8,
                                     prefer_parallel_streams=True),
     "int8_serial": ResourceBudget(precision_bits=8),
@@ -36,13 +42,20 @@ def lm_network_specs(cfg, budget):
     return [
         SiteSpec.make("conv3x3", "conv2d", ((8, 64, 64, 16), (3, 3, 16, 32)),
                       jnp.int8, dual=dual),
+        # the FFN tolerates w8a8: the planner may descend to 8 bits
         SiteSpec.make("ffn", "matmul", ((4096, D), (D, F)), mm_dtype,
-                      dual=dual),
+                      ladder=(8,), dual=dual),
         SiteSpec.make("attn_train4k", "attention",
                       ((8, 32, 4096, 64), (8, 8, 4096, 64)), jnp.bfloat16),
         SiteSpec.make("attn_decode32k", "attention",
                       ((128, 32, 1, 64), (128, 8, 32768, 64)), jnp.bfloat16),
     ]
+
+
+def _cell(site):
+    """member@bits, '*' when the precision ladder lowered the site."""
+    return (f"{site.ip.name.split('.')[-1]}@{site.precision_bits}b"
+            + ("*" if site.lowered else ""))
 
 
 def main():
@@ -56,7 +69,7 @@ def main():
         specs = lm_network_specs(cfg, b)
         try:
             plan = plan_network(specs, b)
-            cells = [plan[s.name][0].name.split(".")[-1] for s in specs]
+            cells = [_cell(plan.site(s.name)) for s in specs]
         except ValueError:
             # no joint plan: fall back to per-site full-budget selection
             # so the table shows WHICH sites cannot run
@@ -65,7 +78,7 @@ def main():
                 try:
                     cells.append(
                         select_ip(s.family, s, budget=b).name.split(".")[-1]
-                        + "*")
+                        + "!")
                 except ValueError:
                     cells.append("infeasible")
         print(f"{name:<14s} {cells[0]:<18s} {cells[1]:<20s} "
@@ -73,7 +86,9 @@ def main():
     print("\nNote: 'no_mxu' steers every site to the logic-only (Conv1-"
           "analogue) members; 'int8_parallel' unlocks the packed dual-"
           "stream (Conv3-analogue) members — paper Table I, automated. "
-          "A '*' marks per-site fallback choices when no joint "
+          "A '*' marks sites the precision ladder lowered below native "
+          "width (e.g. the FFN dropping to w8a8 under 'vmem_6MiB'); a "
+          "'!' marks per-site fallback choices when no joint "
           "whole-network plan exists under the budget.")
 
 

@@ -15,6 +15,12 @@ Part 2 shows the precision axis the activation family adds: under an
 8-bit-precision budget the selector swaps the exact transcendental for
 the fixed-point LUT IP, trading a bounded approximation error for ~4x
 fewer vector ops and 1-byte operand streaming.
+
+Part 3 plans the precision ladder: a float32 block that does NOT fit a
+tight VMEM envelope is re-planned with per-site ``ladder=(16, 8)`` —
+the planner lowers exactly the sites that need it (the ``p=`` column of
+``describe()``), execution quantizes accordingly, and the per-site
+error report quantifies what the fit cost.
 """
 import sys
 from pathlib import Path
@@ -125,6 +131,38 @@ def main():
     assert ip_low.name == "activation.act_lut"
     assert err < 0.05
     print("precision-driven swap verified. ✓")
+
+    # --- Part 3: the precision ladder ------------------------------------
+    import jax
+
+    from repro.models.blocks import (apply_cnn_block, cnn_block_site_specs,
+                                     init_cnn_block)
+    from repro.quant.report import max_rel_error, summarize
+
+    block = init_cnn_block(jax.random.PRNGKey(0), cin=8, cout=16, k=3)
+    xs = jnp.asarray(rng.normal(size=(2, 16, 16, 8)).astype(np.float32))
+    y_f32 = apply_cnn_block(block, xs, activation="relu")
+    tight = ResourceBudget(vmem_bytes=30 * 1024)
+    try:
+        apply_cnn_block(block, xs, budget=tight, activation="relu")
+        raise AssertionError("expected the f32-only block to be infeasible")
+    except ValueError:
+        print(f"\nf32-only block under {tight.vmem_bytes // 1024}KiB VMEM: "
+              "infeasible (as expected)")
+    report = {}
+    y_lad = apply_cnn_block(block, xs, budget=tight, ladder=(16, 8),
+                            activation="relu", quant_report=report)
+    specs3, _ = cnn_block_site_specs(xs.shape, block["w"].shape,
+                                     x_dtype=xs.dtype, activation="relu",
+                                     ladder=(16, 8))
+    plan3 = plan_network(specs3, tight)
+    print("ladder-planned block (note the p= column):")
+    print(plan3.describe())
+    print("per-site quantization error report:")
+    print(summarize(report))
+    rel = float(jnp.linalg.norm(y_lad - y_f32) / jnp.linalg.norm(y_f32))
+    assert max_rel_error(report) <= 5e-2 and rel <= 5e-2
+    print(f"ladder made the block fit; end-to-end rel err {rel:.2e} ≤ 5e-2 ✓")
 
 
 if __name__ == "__main__":

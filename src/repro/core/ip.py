@@ -27,6 +27,15 @@ def _freeze(value):
     return value
 
 
+# Widths a precision ladder may assign — exactly the widths the quant
+# execution layer (repro.quant.ops) can run — and the fixed-point dtype
+# a lowered site is priced (and, for int8, executed) at.  A native-width
+# rung is never "lowered", so 32 is deliberately NOT a legal ladder
+# entry: it would plan a lowering the runtime rejects.
+LADDER_WIDTHS = (16, 8)
+WIDTH_DTYPES = {8: "int8", 16: "int16"}
+
+
 @dataclasses.dataclass(frozen=True)
 class SiteSpec:
     """One op site of a network graph, declaratively.
@@ -36,6 +45,12 @@ class SiteSpec:
     ``(x_shape, w_shape)`` for conv2d); ``knobs`` are the op-level
     switches (``dual``, ``mode``, ``kind``, ``window``...) as a sorted
     tuple of pairs so equal specs hash equally.
+
+    ``ladder`` is the site's *precision ladder*: the operand widths (in
+    bits, e.g. ``(16, 8)``) the planner may quantize this site down to
+    when it cannot fit at its native width (docs/adaptive_ips.md,
+    "Precision contract").  Empty means the native width is the only
+    legal one — the pre-ladder behavior.
     """
 
     name: str
@@ -43,15 +58,22 @@ class SiteSpec:
     shapes: Tuple[Tuple[int, ...], ...]
     dtype: str = "float32"
     knobs: Tuple[Tuple[str, Any], ...] = ()
+    ladder: Tuple[int, ...] = ()
 
     @classmethod
     def make(cls, name: str, family: str, shapes, dtype="float32",
-             **knobs) -> "SiteSpec":
+             ladder=(), **knobs) -> "SiteSpec":
         import jax.numpy as jnp
         norm_shapes = tuple(tuple(int(d) for d in s) for s in shapes)
         norm_knobs = tuple(sorted((k, _freeze(v)) for k, v in knobs.items()))
+        norm_ladder = tuple(sorted({int(b) for b in ladder}, reverse=True))
+        for b in norm_ladder:
+            if b not in LADDER_WIDTHS:
+                raise ValueError(f"unsupported ladder width {b}; "
+                                 f"have {sorted(LADDER_WIDTHS)}")
         return cls(name=name, family=family, shapes=norm_shapes,
-                   dtype=jnp.dtype(dtype).name, knobs=norm_knobs)
+                   dtype=jnp.dtype(dtype).name, knobs=norm_knobs,
+                   ladder=norm_ladder)
 
     def knob(self, key: str, default=None):
         for k, v in self.knobs:
@@ -59,17 +81,37 @@ class SiteSpec:
                 return v
         return default
 
+    @property
+    def native_bits(self) -> int:
+        """Physical width of the caller's operands at this site."""
+        import jax.numpy as jnp
+        return jnp.dtype(self.dtype).itemsize * 8
+
+    def widths(self) -> Tuple[int, ...]:
+        """Widths the planner may try, native first then the ladder's
+        strictly-narrower rungs in descending order."""
+        native = self.native_bits
+        return (native,) + tuple(b for b in self.ladder if b < native)
+
+    def at_precision(self, bits: int) -> "SiteSpec":
+        """This site lowered to ``bits``-wide fixed-point operands (the
+        spec the family adapter prices); native width returns self."""
+        if bits >= self.native_bits:
+            return self
+        return dataclasses.replace(self, dtype=WIDTH_DTYPES[bits])
+
     def to_dict(self) -> dict:
         return {"name": self.name, "family": self.family,
                 "shapes": [list(s) for s in self.shapes],
                 "dtype": self.dtype,
                 "knobs": {k: list(v) if isinstance(v, tuple) else v
-                          for k, v in self.knobs}}
+                          for k, v in self.knobs},
+                "ladder": list(self.ladder)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "SiteSpec":
         return cls.make(d["name"], d["family"], d["shapes"], d["dtype"],
-                        **d.get("knobs", {}))
+                        ladder=d.get("ladder", ()), **d.get("knobs", {}))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,12 +164,19 @@ class IPFamily:
     ``site_adapter`` makes the family plannable: it maps a ``SiteSpec``
     to a ``SiteRequest`` so the generic engine in ``core/plan.py`` can
     select for this family without family-specific code.
+
+    ``quantizable`` gates the precision ladder: only families with a
+    real fixed-point execution path (``repro.quant.ops``) may have their
+    sites lowered below native width.  Attention and the SSM scan have
+    no integer kernels, so pricing them at int8 would promise a plan the
+    runtime cannot execute.
     """
 
     name: str
     members: Dict[str, KernelIP] = dataclasses.field(default_factory=dict)
     reference: Optional[Callable[..., Any]] = None
     site_adapter: Optional[Callable[[SiteSpec], SiteRequest]] = None
+    quantizable: bool = True
 
     def plan_site(self, spec: SiteSpec) -> SiteRequest:
         if spec.family != self.name:

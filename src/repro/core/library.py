@@ -123,7 +123,9 @@ MATMUL.register(KernelIP(
 # --------------------------------------------------------------------------
 # attention family.
 # --------------------------------------------------------------------------
-ATTENTION = IPFamily("attention", reference=attention_ref)
+# No integer kernels exist for attention — the precision ladder must
+# never lower its sites (quantizable=False; see IPFamily docstring).
+ATTENTION = IPFamily("attention", reference=attention_ref, quantizable=False)
 ATTENTION.register(KernelIP(
     name="attention.attn_naive", family="attention", impl=attention_ref,
     footprint_fn=lambda b, hq, hkv, sq, skv, d, **kw: attn_flash_mod.footprint(
@@ -150,7 +152,8 @@ ATTENTION.register(KernelIP(
 from repro.kernels.mamba_scan import scan as mamba_scan_mod  # noqa: E402
 from repro.kernels.mamba_scan.ref import selective_scan_ref  # noqa: E402
 
-SSM_SCAN = IPFamily("ssm_scan", reference=selective_scan_ref)
+SSM_SCAN = IPFamily("ssm_scan", reference=selective_scan_ref,
+                    quantizable=False)
 SSM_SCAN.register(KernelIP(
     name="ssm_scan.selective_vmem", family="ssm_scan",
     impl=mamba_scan_mod.selective_scan,

@@ -14,6 +14,15 @@ the single selection engine behind every family:
   floors every site at the minimal slice its cheapest member needs.
   This replaces the "every op sees the full budget" fiction the
   per-call-site selectors lived with.
+* The **precision ladder**: a ``SiteSpec`` may declare narrower operand
+  widths it tolerates (``ladder=(16, 8)``).  When a site cannot fit at
+  its current width — under the full budget or under its partitioned
+  slice — the planner descends the ladder *before* declaring
+  infeasibility, re-running selection at the lowered width so packed
+  int8 members (conv2d.ip3_packed, int8 matmul) and shrunken footprints
+  enter the race.  The chosen width lands in
+  ``PlannedSite.precision_bits`` and the execution layer
+  (``repro.quant.ops``, ``models/blocks.py``) quantizes accordingly.
 * Plans are memoized on ``(graph-key, budget)`` — repeated trace-time
   calls (e.g. re-tracing ``apply_cnn_block``) are O(1) dict hits with
   zero new footprint evaluations — and serialize to/from JSON for
@@ -107,6 +116,43 @@ def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
     return feasible[0][2], feasible[0][3]
 
 
+def _width_budget(budget: ResourceBudget, spec: SiteSpec,
+                  bits: int) -> ResourceBudget:
+    """The budget a site sees when planned at ``bits``.  A ladder entry
+    is the site's explicit waiver of the deployment-wide precision
+    floor: lowering to 8 bits caps ``precision_bits`` at 8 so 8-bit
+    members (the LUT activation, the packed conv) become legal."""
+    if bits >= spec.native_bits or budget.precision_bits <= bits:
+        return budget
+    return dataclasses.replace(budget, precision_bits=bits)
+
+
+def _select_site(spec: SiteSpec, budget: ResourceBudget):
+    """Select for one site, descending its precision ladder on failure.
+
+    Widths are tried native-first (precision is only sacrificed when the
+    current width genuinely does not fit); each rung re-enters the full
+    selection race at the lowered operand width, which both shrinks
+    footprints (narrower itemsize) and unlocks width-capped members.
+    Returns ``(KernelIP, Footprint, bits)``; raises the family-standard
+    error only after the narrowest rung fails.
+    """
+    fam = _get_family(spec.family)
+    widths = spec.widths()
+    if not fam.quantizable:
+        widths = widths[:1]
+    err = None
+    for bits in widths:
+        req = fam.plan_site(spec.at_precision(bits))
+        try:
+            ip, fp = _select(req.candidates, _width_budget(budget, spec, bits),
+                             req.fp_args, dict(req.fp_kwargs), req.op_bits)
+            return ip, fp, bits
+        except ValueError as e:
+            err = err or e      # surface the native-width failure
+    raise err
+
+
 def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
               budget: Optional[ResourceBudget] = None,
               with_footprint: bool = False):
@@ -114,13 +160,16 @@ def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
 
     The family's registered site adapter turns ``spec`` into candidates
     + footprint arguments; feasibility and ranking are identical for
-    every family (docs/adaptive_ips.md#selection-semantics).
+    every family (docs/adaptive_ips.md#selection-semantics).  Sites with
+    a precision ladder descend it on failure exactly as ``plan_network``
+    does (use ``plan_single`` when the chosen width matters).
     """
     fam = _get_family(family)
-    req = fam.plan_site(spec)
+    if spec.family != fam.name:
+        raise ValueError(f"site {spec.name!r} is a {spec.family!r} site, "
+                         f"not {fam.name!r}")
     budget = budget or ResourceBudget()
-    ip, fp = _select(req.candidates, budget, req.fp_args,
-                     dict(req.fp_kwargs), req.op_bits)
+    ip, fp, _ = _select_site(spec, budget)
     return (ip, fp) if with_footprint else ip
 
 
@@ -129,13 +178,20 @@ def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class PlannedSite:
-    """One site's resolved decision: the member, its price, and the
-    fraction of the network budget the partitioner granted it."""
+    """One site's resolved decision: the member, its price, the fraction
+    of the network budget the partitioner granted it, and the operand
+    width the precision ladder settled on (== the spec's native width
+    when no lowering was needed)."""
 
     spec: SiteSpec
     ip: KernelIP
     footprint: Footprint
     fraction: float
+    precision_bits: int = 32
+
+    @property
+    def lowered(self) -> bool:
+        return self.precision_bits < self.spec.native_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,13 +234,23 @@ class NetworkPlan:
         return sum(s.footprint.est_cycles / max(s.footprint.outputs_per_pass, 1)
                    for s in self.sites)
 
+    def precision_of(self, name: str) -> int:
+        """The operand width the ladder settled on for one site."""
+        return self.site(name).precision_bits
+
+    def lowered_sites(self) -> Tuple[PlannedSite, ...]:
+        """Sites the precision ladder actually lowered below native."""
+        return tuple(s for s in self.sites if s.lowered)
+
     def describe(self) -> str:
         lines = []
         for s in self.sites:
             fp = s.footprint
+            prec = (f"int{s.precision_bits}*" if s.lowered
+                    else f"{s.precision_bits}b")
             lines.append(
                 f"{s.spec.name:<40s} -> {s.ip.name:<28s} "
-                f"frac={s.fraction:5.3f} "
+                f"p={prec:<6s} frac={s.fraction:5.3f} "
                 f"vmem={fp.vmem_bytes/2**20:7.2f}MiB "
                 f"mxu={fp.mxu_passes:<8d} vpu={fp.vpu_ops:.2e} "
                 f"cyc={fp.est_cycles:.3e}")
@@ -200,6 +266,7 @@ class NetworkPlan:
                 "spec": s.spec.to_dict(),
                 "ip": s.ip.name,
                 "fraction": s.fraction,
+                "precision_bits": s.precision_bits,
                 "footprint": dataclasses.asdict(s.footprint),
             } for s in self.sites],
         }, indent=indent)
@@ -208,13 +275,18 @@ class NetworkPlan:
     def from_json(cls, text: str) -> "NetworkPlan":
         from repro.core.library import get_ip
         d = json.loads(text)
-        sites = tuple(PlannedSite(
-            spec=SiteSpec.from_dict(r["spec"]),
-            ip=get_ip(r["ip"]),
-            fraction=float(r["fraction"]),
-            footprint=Footprint(**r["footprint"]),
-        ) for r in d["sites"])
-        return cls(budget=ResourceBudget(**d["budget"]), sites=sites)
+        sites = []
+        for r in d["sites"]:
+            spec = SiteSpec.from_dict(r["spec"])
+            sites.append(PlannedSite(
+                spec=spec,
+                ip=get_ip(r["ip"]),
+                fraction=float(r["fraction"]),
+                precision_bits=int(r.get("precision_bits",
+                                         spec.native_bits)),
+                footprint=Footprint(**r["footprint"]),
+            ))
+        return cls(budget=ResourceBudget(**d["budget"]), sites=tuple(sites))
 
 
 # ---------------------------------------------------------------------------
@@ -236,20 +308,25 @@ def _min_fraction(fp: Footprint, budget: ResourceBudget) -> float:
     return max(ratios)
 
 
-def _site_need(req, budget: ResourceBudget) -> float:
+def _site_need(spec: SiteSpec, budget: ResourceBudget) -> float:
     """Minimal fraction at which *some* candidate of this site is
-    feasible (capped at 1.0 — full-budget feasibility is checked
-    separately)."""
+    feasible — at its native width or any ladder rung (capped at 1.0;
+    full-budget feasibility is checked separately)."""
+    fam = _get_family(spec.family)
+    widths = spec.widths() if fam.quantizable else spec.widths()[:1]
     best = None
-    for ip in req.candidates:
-        STATS.selector_evals += 1
-        fp = ip.footprint(*req.fp_args, **dict(req.fp_kwargs))
-        if req.op_bits > fp.max_operand_bits:
-            continue
-        if not fp.fits(budget):        # full budget: non-scalable gates too
-            continue
-        f = min(_min_fraction(fp, budget), 1.0)
-        best = f if best is None else min(best, f)
+    for bits in widths:
+        req = fam.plan_site(spec.at_precision(bits))
+        wb = _width_budget(budget, spec, bits)
+        for ip in req.candidates:
+            STATS.selector_evals += 1
+            fp = ip.footprint(*req.fp_args, **dict(req.fp_kwargs))
+            if req.op_bits > fp.max_operand_bits:
+                continue
+            if not fp.fits(wb):        # full budget: non-scalable gates too
+                continue
+            f = min(_min_fraction(fp, wb), 1.0)
+            best = f if best is None else min(best, f)
     return 1.0 if best is None else best
 
 
@@ -280,10 +357,12 @@ def plan_network(specs: Iterable[SiteSpec],
 
 
 def plan_single(spec: SiteSpec,
-                budget: Optional[ResourceBudget] = None):
+                budget: Optional[ResourceBudget] = None) -> "PlannedSite":
     """One-site plan (the kernels' ``budget=`` path): full budget, same
-    engine, same memoization. Returns the (KernelIP, Footprint) pair."""
-    return plan_network((spec,), budget)[spec.name]
+    engine, same memoization.  Returns the ``PlannedSite`` — callers
+    needing only the member read ``.ip``; the quantized wrappers also
+    read ``.precision_bits`` to decide whether to lower execution."""
+    return plan_network((spec,), budget).site(spec.name)
 
 
 def _plan_uncached(specs: Tuple[SiteSpec, ...],
@@ -295,25 +374,22 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...],
         dupes = sorted({n for n in names if names.count(n) > 1})
         raise ValueError(f"duplicate site names in network: {dupes}")
 
-    reqs = [_get_family(s.family).plan_site(s) for s in specs]
-
     # 1) Full-budget baseline: cost shares (raises "no feasible IP" for a
-    #    site that cannot run even with everything).
-    base = [_select(r.candidates, budget, r.fp_args, dict(r.fp_kwargs),
-                    r.op_bits) for r in reqs]
-    costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp in base]
+    #    site that cannot run even with everything — after descending its
+    #    precision ladder, when it has one).
+    base = [_select_site(s, budget) for s in specs]
+    costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp, _ in base]
     total_cost = sum(costs) or 1.0
     fractions = [c / total_cost for c in costs]
 
     def try_assign(fracs):
         planned, failed = [], []
-        for spec, req, frac in zip(specs, reqs, fracs):
+        for spec, frac in zip(specs, fracs):
             try:
-                ip, fp = _select(req.candidates, budget.scaled(frac),
-                                 req.fp_args, dict(req.fp_kwargs),
-                                 req.op_bits)
+                ip, fp, bits = _select_site(spec, budget.scaled(frac))
                 planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
-                                           fraction=frac))
+                                           fraction=frac,
+                                           precision_bits=bits))
             except ValueError:
                 planned.append(None)
                 failed.append(spec.name)
@@ -322,8 +398,9 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...],
     planned, failed = try_assign(fractions)
     if failed:
         # 2) Greedy repair: floor each site at the minimal slice its
-        #    cheapest member needs; only the surplus follows cost shares.
-        needs = [_site_need(r, budget) for r in reqs]
+        #    cheapest member (at its cheapest legal width) needs; only
+        #    the surplus follows cost shares.
+        needs = [_site_need(s, budget) for s in specs]
         total_need = sum(needs)
         if total_need > 1.0 + 1e-9:
             raise ValueError(

@@ -1,65 +1,17 @@
-"""Fixed-point (int8) path for the LM hot ops — the paper's arithmetic
-discipline applied beyond convolution.
+"""Compatibility shim — the fixed-point subsystem moved to ``repro.quant``.
 
-Symmetric per-channel weight quantization + per-tensor activation
-quantization feeding the int8 matmul IP (`mm_mxu` int8 / the
-`mm_dual_shared` Conv3-analogue).  W8A8 with int32 accumulation and
-f32 rescale — the standard TPU int8 serving recipe, and the direct
-generalization of the paper's "8-bit fixed-point data" experiments.
+Quantization grew from a matmul-only helper into a first-class, planned
+dimension (per-site precision ladders, calibration, per-family quantized
+execution); the real module tree is ``src/repro/quant/``.  This file
+keeps the historical import path alive for existing callers.
 """
-from __future__ import annotations
+from repro.quant.quantize import (MIN_SCALE, QuantizedTensor, dequantize,
+                                  fake_quant, int8_matmul,
+                                  quantization_error, quantize_acts,
+                                  quantize_weights)
 
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-
-
-class QuantizedTensor(NamedTuple):
-    q: jnp.ndarray          # int8 payload
-    scale: jnp.ndarray      # f32; () per-tensor or (channels,) per-channel
-
-
-def quantize_weights(w: jnp.ndarray, *, axis: int = -1) -> QuantizedTensor:
-    """Symmetric per-output-channel int8 quantization."""
-    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=tuple(
-        i for i in range(w.ndim) if i != (axis % w.ndim)), keepdims=True)
-    scale = amax / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
-    return QuantizedTensor(q, scale.astype(jnp.float32))
-
-
-def quantize_acts(x: jnp.ndarray) -> QuantizedTensor:
-    """Symmetric per-tensor int8 activation quantization."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32))) + 1e-12
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return QuantizedTensor(q, scale.astype(jnp.float32))
-
-
-def int8_matmul(x: jnp.ndarray, wq: QuantizedTensor, *,
-                use_kernel: bool = False) -> jnp.ndarray:
-    """y = x @ dequant(wq): int8 x int8 -> int32 accumulate, f32 rescale.
-
-    ``use_kernel=True`` routes through the Pallas mm_mxu int8 kernel
-    (interpret mode on CPU); otherwise the jnp twin lowers the same
-    int32-accumulation contraction.
-    """
-    xq = quantize_acts(x)
-    if use_kernel:
-        from repro.kernels.matmul.mxu import mm_mxu
-        acc = mm_mxu(xq.q.reshape(-1, xq.q.shape[-1]), wq.q)
-        acc = acc.reshape(x.shape[:-1] + (wq.q.shape[-1],))
-    else:
-        acc = jnp.einsum("...k,kn->...n", xq.q.astype(jnp.int32),
-                         wq.q.astype(jnp.int32))
-    out_scale = xq.scale * wq.scale.reshape(
-        (1,) * (acc.ndim - 1) + (-1,))
-    return acc.astype(jnp.float32) * out_scale
-
-
-def quantization_error(w: jnp.ndarray, axis: int = -1) -> float:
-    """Relative Frobenius error of the weight quantization (diagnostic)."""
-    wq = quantize_weights(w, axis=axis)
-    deq = wq.q.astype(jnp.float32) * wq.scale
-    return float(jnp.linalg.norm(deq - w) / (jnp.linalg.norm(w) + 1e-12))
+__all__ = [
+    "MIN_SCALE", "QuantizedTensor", "dequantize", "fake_quant",
+    "int8_matmul", "quantization_error", "quantize_acts",
+    "quantize_weights",
+]

@@ -1,4 +1,9 @@
-"""Public wrappers for the attention IP family (selector-aware)."""
+"""Public wrappers for the attention IP family (selector-aware).
+
+Attention carries no ``ladder=``: the family is registered
+``quantizable=False`` (no integer kernels), so the planner always holds
+its sites at native width.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -19,7 +24,7 @@ def attention(q, k, v, *, causal: bool = True, ip: Optional[str] = None,
         from repro.core.plan import plan_single
         spec = SiteSpec.make("attention", "attention", (q.shape, k.shape),
                              q.dtype)
-        ip = plan_single(spec, budget)[0].name
+        ip = plan_single(spec, budget).ip.name
     ip = ip.split(".")[-1]
     if ip == "attn_flash":
         return flash_attention(q, k, v, causal=causal, interpret=interpret)

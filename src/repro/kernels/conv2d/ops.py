@@ -3,6 +3,11 @@
 `conv2d` / `conv2d_dual` take an explicit ``ip=`` name or a
 ``budget=`` (ResourceBudget) and defer to the resource-driven selector
 — the paper's "automatic adaptation to the available resources".
+
+``ladder=`` (e.g. ``(16, 8)``) lets the planner lower this call's
+operand width when it cannot fit at native precision; a lowered plan
+executes transparently through the quantized path
+(``repro.quant.ops.quantized_conv2d``) and still returns float.
 """
 from __future__ import annotations
 
@@ -21,15 +26,20 @@ _DUAL = {"ip3_packed": conv2d_ip3, "ip4_dual": conv2d_ip4}
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
-           budget: Optional[ResourceBudget] = None,
+           budget: Optional[ResourceBudget] = None, ladder=(),
            interpret: bool = True) -> jnp.ndarray:
     """Single-stream convolution through a selected IP (Conv1/Conv2)."""
     if ip is None:
         from repro.core.ip import SiteSpec
         from repro.core.plan import plan_single
         spec = SiteSpec.make("conv2d", "conv2d", (x.shape, w.shape),
-                             x.dtype, dual=False)
-        ip = plan_single(spec, budget)[0].name
+                             x.dtype, ladder=ladder, dual=False)
+        planned = plan_single(spec, budget)
+        if planned.lowered:
+            from repro.quant.ops import quantized_conv2d
+            return quantized_conv2d(x, w, bits=planned.precision_bits,
+                                    ip=planned.ip.name, interpret=interpret)
+        ip = planned.ip.name
     ip = ip.split(".")[-1]
     if ip not in _SINGLE:
         raise KeyError(f"{ip!r} is not a single-stream conv IP "
@@ -41,13 +51,17 @@ def conv2d_dual(xa: jnp.ndarray, xb: jnp.ndarray, w: jnp.ndarray, *,
                 ip: Optional[str] = None,
                 budget: Optional[ResourceBudget] = None,
                 interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Two parallel convolutions through a selected IP (Conv3/Conv4)."""
+    """Two parallel convolutions through a selected IP (Conv3/Conv4).
+
+    No ``ladder=``: dual-stream callers already commit to a concrete
+    operand dtype per stream (Conv3 demands int8 inputs outright).
+    """
     if ip is None:
         from repro.core.ip import SiteSpec
         from repro.core.plan import plan_single
         spec = SiteSpec.make("conv2d", "conv2d", (xa.shape, w.shape),
                              xa.dtype, dual=True)
-        ip = plan_single(spec, budget)[0].name
+        ip = plan_single(spec, budget).ip.name
     ip = ip.split(".")[-1]
     if ip not in _DUAL:
         raise KeyError(f"{ip!r} is not a dual-stream conv IP "

@@ -2,7 +2,9 @@
 
 `pool2d` takes an explicit ``ip=`` name or a ``budget=``
 (ResourceBudget) and defers to the resource-driven selector, mirroring
-`kernels/conv2d/ops.py`.
+`kernels/conv2d/ops.py`.  ``ladder=`` allows the planner to lower the
+call's operand width; lowered plans execute through
+``repro.quant.ops.quantized_pool2d`` and return float.
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ _MEMBERS = {"pool_vpu": pool2d_window, "pool_im2col": pool2d_im2col}
 
 def pool2d(x: jnp.ndarray, *, window=(2, 2), stride=None, mode: str = "max",
            ip: Optional[str] = None,
-           budget: Optional[ResourceBudget] = None,
+           budget: Optional[ResourceBudget] = None, ladder=(),
            interpret: bool = True) -> jnp.ndarray:
     """Max/avg pooling through a selected IP (Pool1/Pool2)."""
     if mode not in ("max", "avg"):
@@ -30,8 +32,15 @@ def pool2d(x: jnp.ndarray, *, window=(2, 2), stride=None, mode: str = "max",
         from repro.core.ip import SiteSpec
         from repro.core.plan import plan_single
         spec = SiteSpec.make("pool2d", "pool2d", (x.shape,), x.dtype,
-                             window=window, stride=stride, mode=mode)
-        ip = plan_single(spec, budget)[0].name
+                             ladder=ladder, window=window, stride=stride,
+                             mode=mode)
+        planned = plan_single(spec, budget)
+        if planned.lowered:
+            from repro.quant.ops import quantized_pool2d
+            return quantized_pool2d(x, window=window, stride=stride,
+                                    mode=mode, bits=planned.precision_bits,
+                                    ip=planned.ip.name, interpret=interpret)
+        ip = planned.ip.name
     ip = ip.split(".")[-1]
     if ip not in _MEMBERS:
         raise KeyError(f"{ip!r} is not a pool2d IP (have {sorted(_MEMBERS)})")

@@ -141,7 +141,7 @@ def init_cnn_block(key, cin: int, cout: int, k: int = 3,
 def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
                          pool_window=(2, 2), pool_stride=None,
                          pool_mode: str = "max", activation: str = "relu",
-                         site: str = "cnn_block"):
+                         site: str = "cnn_block", ladder=()):
     """Declarative op sites of one conv -> pool -> act block.
 
     Intermediate shapes/dtypes come from the family oracles via
@@ -149,6 +149,11 @@ def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
     with what the kernels will actually produce.  Returns
     ``(specs, out_aval)`` — the latter lets a caller chain blocks into a
     single whole-network plan (see models/frontends.py).
+
+    ``ladder`` (e.g. ``(16, 8)``) attaches the same precision ladder to
+    all three sites: the planner may quantize any of them below native
+    width when the budget demands it (docs/adaptive_ips.md, "Precision
+    contract").
     """
     import functools
 
@@ -168,12 +173,12 @@ def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
         functools.partial(activation_ref, kind=activation), pool_aval)
     specs = [
         SiteSpec.make(f"{site}.conv", "conv2d", (x_aval.shape, w_aval.shape),
-                      x_aval.dtype, dual=False),
+                      x_aval.dtype, ladder=ladder, dual=False),
         SiteSpec.make(f"{site}.pool", "pool2d", (conv_aval.shape,),
-                      conv_aval.dtype, window=pool_window,
+                      conv_aval.dtype, ladder=ladder, window=pool_window,
                       stride=pool_stride, mode=pool_mode),
         SiteSpec.make(f"{site}.act", "activation", (pool_aval.shape,),
-                      pool_aval.dtype, kind=activation),
+                      pool_aval.dtype, ladder=ladder, kind=activation),
     ]
     return specs, act_aval
 
@@ -181,7 +186,8 @@ def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
 def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     pool_stride=None, pool_mode: str = "max",
                     activation: str = "relu", interpret: bool = True,
-                    plan=None, site: str = "cnn_block", network=None):
+                    plan=None, site: str = "cnn_block", network=None,
+                    ladder=(), quant_report=None):
     """One adaptive CNN layer: conv -> pool -> activation.
 
     The three sites are planned as one ``NetworkPlan`` under a
@@ -192,6 +198,16 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
     to execute from an outer plan instead.  When ``plan`` (a dict) is
     passed, the three (KernelIP, Footprint) decisions are recorded
     under ``site`` — renderable with ``describe_plan``.
+
+    **Mixed precision.** With a ``ladder`` the planner may assign any
+    site a lowered operand width; execution honors the plan with
+    quantize/dequantize boundaries inserted only where adjacent sites
+    disagree: an int8 conv feeds its (requantized) codes straight into
+    an int8 pool, and an int8 relu runs on the codes too (relu commutes
+    with the positive scale), so a fully-lowered block performs ONE
+    dequantize at its egress.  ``quant_report`` (a dict) receives a
+    ``SiteQuantReport`` per site — the measured relative error vs the
+    family oracles evaluated in float32.
     """
     from repro.core.plan import plan_network
     from repro.kernels.activation.ops import activation as activation_op
@@ -201,7 +217,8 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
     specs, _ = cnn_block_site_specs(
         x.shape, p["w"].shape, x_dtype=x.dtype, w_dtype=p["w"].dtype,
         pool_window=pool_window, pool_stride=pool_stride,
-        pool_mode=pool_mode, activation=activation, site=site)
+        pool_mode=pool_mode, activation=activation, site=site,
+        ladder=ladder)
     if network is None:
         network = plan_network(specs, budget)
     else:
@@ -216,21 +233,100 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     f"network was planned for {planned}, but this call "
                     f"executes {spec}")
 
-    ip, fp = network[f"{site}.conv"]
+    conv_s = network.site(f"{site}.conv")
+    pool_s = network.site(f"{site}.pool")
+    act_s = network.site(f"{site}.act")
     if plan is not None:
-        plan[f"{site}.conv"] = (ip, fp)
-    y = conv2d(x, p["w"], ip=ip.name, interpret=interpret)
+        for s in (conv_s, pool_s, act_s):
+            plan[s.spec.name] = (s.ip, s.footprint)
 
-    ip, fp = network[f"{site}.pool"]
-    if plan is not None:
-        plan[f"{site}.pool"] = (ip, fp)
-    y = pool2d(y, window=pool_window, stride=pool_stride, mode=pool_mode,
-               ip=ip.name, interpret=interpret)
+    if quant_report is not None:
+        import functools
 
-    ip, fp = network[f"{site}.act"]
-    if plan is not None:
-        plan[f"{site}.act"] = (ip, fp)
-    return activation_op(y, kind=activation, ip=ip.name, interpret=interpret)
+        from repro.kernels.activation.ref import activation_ref
+        from repro.kernels.conv2d.ref import conv2d_ref
+        from repro.kernels.pool2d.ref import pool2d_ref
+        from repro.quant.report import record
+        ref = conv2d_ref(x.astype(jnp.float32),
+                         p["w"].astype(jnp.float32))
+        pool_ref = functools.partial(pool2d_ref, window=pool_window,
+                                     stride=pool_stride, mode=pool_mode)
+
+    # qscale is not None  <=>  y holds fixed-point codes (or an integer
+    # accumulator) whose real value is y * qscale.
+    qscale = None
+
+    # -- conv ---------------------------------------------------------------
+    if conv_s.lowered:
+        from repro.quant.ops import quantized_conv2d
+        # int8 returns the raw accumulator + scale (the dequantize fuses
+        # into the next stage); 16-bit fake-quant returns (float, None).
+        y, qscale = quantized_conv2d(x, p["w"], bits=conv_s.precision_bits,
+                                     ip=conv_s.ip.name, interpret=interpret,
+                                     return_scale=True)
+    else:
+        y = conv2d(x, p["w"], ip=conv_s.ip.name, interpret=interpret)
+    if quant_report is not None:
+        got = y if qscale is None else y.astype(jnp.float32) * qscale
+        record(quant_report, conv_s.spec.name, conv_s.precision_bits,
+               got, ref)
+
+    # -- pool ---------------------------------------------------------------
+    if qscale is not None and pool_s.precision_bits == 8 and pool_s.lowered:
+        # Adjacent int8 sites: requantize the int32 accumulator to int8
+        # codes (the standard fixed-point interlayer step) and pool the
+        # codes — no float boundary.
+        from repro.quant.quantize import quantize_acts
+        yq = quantize_acts(y.astype(jnp.float32) * qscale, bits=8)
+        y = pool2d(yq.q, window=pool_window, stride=pool_stride,
+                   mode=pool_mode, ip=pool_s.ip.name, interpret=interpret)
+        qscale = yq.scale
+    else:
+        if qscale is not None:  # widths disagree: dequantize boundary
+            y = y.astype(jnp.float32) * qscale
+            qscale = None
+        if pool_s.lowered:
+            from repro.quant.ops import quantized_pool2d
+            y = quantized_pool2d(y, window=pool_window, stride=pool_stride,
+                                 mode=pool_mode,
+                                 bits=pool_s.precision_bits,
+                                 ip=pool_s.ip.name, interpret=interpret)
+        else:
+            y = pool2d(y, window=pool_window, stride=pool_stride,
+                       mode=pool_mode, ip=pool_s.ip.name,
+                       interpret=interpret)
+    if quant_report is not None:
+        ref = pool_ref(ref)
+        got = y if qscale is None else y.astype(jnp.float32) * qscale
+        record(quant_report, pool_s.spec.name, pool_s.precision_bits,
+               got, ref)
+
+    # -- activation ---------------------------------------------------------
+    if (qscale is not None and act_s.lowered and activation == "relu"
+            and act_s.precision_bits == pool_s.precision_bits):
+        # relu(q * s) == relu(q) * s for s > 0: the activation runs on
+        # the codes and the whole lowered chain dequantizes ONCE here.
+        y = activation_op(y, kind="relu", ip=act_s.ip.name,
+                          interpret=interpret)
+        y = y * qscale
+        qscale = None
+    else:
+        if qscale is not None:
+            y = y.astype(jnp.float32) * qscale
+            qscale = None
+        if act_s.lowered:
+            from repro.quant.ops import quantized_activation
+            y = quantized_activation(y, kind=activation,
+                                     bits=act_s.precision_bits,
+                                     ip=act_s.ip.name, interpret=interpret)
+        else:
+            y = activation_op(y, kind=activation, ip=act_s.ip.name,
+                              interpret=interpret)
+    if quant_report is not None:
+        from repro.kernels.activation.ref import activation_ref
+        ref = activation_ref(ref, kind=activation)
+        record(quant_report, act_s.spec.name, act_s.precision_bits, y, ref)
+    return y
 
 
 # ---------------------------------------------------------------------------

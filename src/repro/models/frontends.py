@@ -67,9 +67,11 @@ def init_cnn_frontend(key, *, channels=(3, 16, 32), k: int = 3,
 
 
 def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
-                            pool_window=(2, 2), activation: str = "relu"):
+                            pool_window=(2, 2), activation: str = "relu",
+                            ladder=()):
     """All op sites of the frontend stack, chained by abstract shapes —
-    the whole-network graph the planner partitions one budget across."""
+    the whole-network graph the planner partitions one budget across.
+    ``ladder`` attaches the same precision ladder to every site."""
     from repro.models.blocks import cnn_block_site_specs
     specs = []
     shape, dtype = tuple(image_shape), image_dtype
@@ -77,7 +79,7 @@ def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
         block_specs, out_aval = cnn_block_site_specs(
             shape, bp["w"].shape, x_dtype=dtype, w_dtype=bp["w"].dtype,
             pool_window=pool_window, activation=activation,
-            site=f"frontend.block{li}")
+            site=f"frontend.block{li}", ladder=ladder)
         specs.extend(block_specs)
         shape, dtype = out_aval.shape, out_aval.dtype
     return specs
@@ -85,26 +87,34 @@ def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
 
 def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
                        activation: str = "relu", interpret: bool = True,
-                       plan=None):
+                       plan=None, ladder=(), quant_report=None):
     """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model).
 
     The entire stack (every conv/pool/act of every block) is planned as
     ONE NetworkPlan: the budget is partitioned across all sites at once
-    rather than each block competing for the full envelope.
+    rather than each block competing for the full envelope.  With a
+    ``ladder`` the plan may be mixed-precision; each block executes its
+    planned widths (see ``apply_cnn_block``) and ``quant_report``
+    collects the per-site measured error across the whole stack.
+
+    NOTE the lowered blocks dequantize at their egress, so the ladder
+    never changes this function's output dtype — only its accuracy,
+    which the report quantifies.
     """
     from repro.core.plan import plan_network
     from repro.models.blocks import apply_cnn_block
     network = plan_network(
         cnn_frontend_site_specs(p, images.shape, images.dtype,
                                 pool_window=pool_window,
-                                activation=activation),
+                                activation=activation, ladder=ladder),
         budget)
     x = images
     for li, bp in enumerate(p["blocks"]):
         x = apply_cnn_block(bp, x, pool_window=pool_window,
                             activation=activation, interpret=interpret,
                             plan=plan, site=f"frontend.block{li}",
-                            network=network)
+                            network=network, ladder=ladder,
+                            quant_report=quant_report)
     b, h, w, c = x.shape
     tokens = x.reshape(b, h * w, c)
     return jnp.einsum("bsc,cd->bsd", tokens, p["proj"].astype(x.dtype))

@@ -1,0 +1,32 @@
+"""Fixed-point precision subsystem — quantization as a *planned*,
+per-site dimension (promoted from ``core/quantize.py``).
+
+Layout:
+
+* ``quantize``  — symmetric intN quantize/dequantize core + error metric
+* ``calibrate`` — activation ranges from sample batches
+* ``ops``       — quantized execution per plannable family
+* ``report``    — per-site quantization-error reports
+
+The planning half (the precision *ladder*) lives in ``core/plan.py``:
+``SiteSpec.ladder`` declares the widths a site may drop to, and the
+network planner descends it before declaring a site infeasible.  See
+docs/adaptive_ips.md, "Precision contract".
+"""
+from repro.quant.calibrate import Calibrator
+from repro.quant.ops import (quantized_activation, quantized_conv2d,
+                             quantized_matmul, quantized_pool2d)
+from repro.quant.quantize import (MIN_SCALE, QuantizedTensor, dequantize,
+                                  fake_quant, int8_matmul, qmax,
+                                  quantization_error, quantize_acts,
+                                  quantize_weights)
+from repro.quant.report import (SiteQuantReport, max_rel_error,
+                                relative_error, summarize)
+
+__all__ = [
+    "Calibrator", "MIN_SCALE", "QuantizedTensor", "SiteQuantReport",
+    "dequantize", "fake_quant", "int8_matmul", "max_rel_error", "qmax",
+    "quantization_error", "quantize_acts", "quantize_weights",
+    "quantized_activation", "quantized_conv2d", "quantized_matmul",
+    "quantized_pool2d", "relative_error", "summarize",
+]

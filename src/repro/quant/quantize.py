@@ -1,0 +1,129 @@
+"""Symmetric fixed-point quantization — the paper's arithmetic discipline
+as a first-class subsystem.
+
+The paper's IPs are defined as much by their operand width as by their
+compute style: 8-bit fixed-point data is what lets Conv3 pack two
+multiplies per DSP slice.  This module is the numeric core of that
+discipline, generalized beyond matmul (see ``quant/ops.py`` for the
+per-family execution paths and ``core/plan.py`` for the precision
+*ladder* that makes operand width a planned, per-site decision):
+
+* ``quantize_weights`` — symmetric per-output-channel intN quantization;
+* ``quantize_acts`` — symmetric per-tensor intN quantization, optionally
+  against a calibrated scale (``quant/calibrate.py``);
+* ``dequantize`` / ``fake_quant`` — the inverse map and the
+  quantize-then-dequantize round trip (how 16-bit sites execute: int32
+  lanes cannot accumulate true int16 products without overflow, so
+  sub-32-bit-but-not-8-bit sites run *fake-quant* — quantized operands,
+  float arithmetic — while 8-bit sites run the true integer kernels);
+* ``quantization_error`` — relative round-trip error, the per-site
+  diagnostic the reports in ``quant/report.py`` aggregate.
+
+All scales are guarded by ``MIN_SCALE``: an all-zero tensor quantizes to
+all-zero codes with a tiny-but-finite scale, so dequantization is exact
+(zero) instead of NaN.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+# Floor for every quantization scale.  Without it an all-zero tensor
+# yields scale == 0 and 0 * inf = NaN on the dequantize side; with it
+# zeros round-trip exactly (0 / MIN_SCALE rounds to code 0).
+MIN_SCALE = 1e-8
+
+_CODE_DTYPES = {8: jnp.int8, 16: jnp.int16}
+
+
+def qmax(bits: int) -> int:
+    """Largest symmetric code at ``bits`` width (127 for int8)."""
+    return (1 << (bits - 1)) - 1
+
+
+def code_dtype(bits: int):
+    if bits not in _CODE_DTYPES:
+        raise ValueError(f"unsupported quantization width {bits}; "
+                         f"have {sorted(_CODE_DTYPES)}")
+    return _CODE_DTYPES[bits]
+
+
+class QuantizedTensor(NamedTuple):
+    q: jnp.ndarray          # intN payload
+    scale: jnp.ndarray      # f32; () per-tensor or broadcastable per-channel
+
+
+def quantize_weights(w: jnp.ndarray, *, axis: int = -1,
+                     bits: int = 8) -> QuantizedTensor:
+    """Symmetric per-output-channel intN quantization."""
+    m = qmax(bits)
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=tuple(
+        i for i in range(w.ndim) if i != (axis % w.ndim)), keepdims=True)
+    scale = jnp.maximum(amax, MIN_SCALE) / m
+    q = jnp.clip(jnp.round(w / scale), -m, m).astype(code_dtype(bits))
+    return QuantizedTensor(q, scale.astype(jnp.float32))
+
+
+def quantize_acts(x: jnp.ndarray, *, bits: int = 8,
+                  scale: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """Symmetric per-tensor intN activation quantization.
+
+    ``scale`` overrides the batch statistic with a calibrated value
+    (``quant/calibrate.py``) so serving does not re-derive ranges per
+    batch; codes saturate at the calibrated range.
+    """
+    m = qmax(bits)
+    if scale is None:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        scale = jnp.maximum(amax, MIN_SCALE) / m
+    scale = jnp.asarray(scale, jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -m, m).astype(code_dtype(bits))
+    return QuantizedTensor(q, scale)
+
+
+def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+def fake_quant(x: jnp.ndarray, *, bits: int = 8, axis: Optional[int] = None
+               ) -> jnp.ndarray:
+    """Quantize-then-dequantize: the float tensor snapped to the intN
+    grid.  Per-channel over ``axis`` when given, per-tensor otherwise.
+    This is how non-8-bit lowered sites execute (see module docstring)."""
+    if axis is None:
+        return dequantize(quantize_acts(x, bits=bits))
+    return dequantize(quantize_weights(x, axis=axis, bits=bits))
+
+
+def int8_matmul(x: jnp.ndarray, wq: QuantizedTensor, *,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """y = x @ dequant(wq): int8 x int8 -> int32 accumulate, f32 rescale.
+
+    ``use_kernel=True`` routes through the Pallas mm_mxu int8 kernel
+    (interpret mode on CPU); otherwise the jnp twin lowers the same
+    int32-accumulation contraction.
+    """
+    xq = quantize_acts(x)
+    if use_kernel:
+        from repro.kernels.matmul.mxu import mm_mxu
+        acc = mm_mxu(xq.q.reshape(-1, xq.q.shape[-1]), wq.q)
+        acc = acc.reshape(x.shape[:-1] + (wq.q.shape[-1],))
+    else:
+        acc = jnp.einsum("...k,kn->...n", xq.q.astype(jnp.int32),
+                         wq.q.astype(jnp.int32))
+    out_scale = xq.scale * wq.scale.reshape(
+        (1,) * (acc.ndim - 1) + (-1,))
+    return acc.astype(jnp.float32) * out_scale
+
+
+def quantization_error(x: jnp.ndarray, *, axis: Optional[int] = -1,
+                       bits: int = 8) -> float:
+    """Relative Frobenius error of the intN round trip (diagnostic).
+
+    ``axis`` selects per-channel scales (weights); ``axis=None`` uses a
+    per-tensor scale (activations).
+    """
+    deq = fake_quant(x, bits=bits, axis=axis)
+    x = x.astype(jnp.float32)
+    return float(jnp.linalg.norm(deq - x) / (jnp.linalg.norm(x) + 1e-12))

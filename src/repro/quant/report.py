@@ -1,0 +1,60 @@
+"""Per-site quantization-error reporting.
+
+A lowered site trades precision for resources; this module is where the
+trade is *measured*.  ``apply_cnn_block`` (models/blocks.py) threads a
+report dict through execution and records, for every site it runs, the
+relative error of the (possibly quantized) site output against the
+family oracle evaluated in float32 — so a mixed-precision plan ships
+with the evidence of what each lowering cost.  ``benchmarks/run.py``'s
+``table_precision`` aggregates these into the f32-vs-ladder comparison
+columns, and ``summarize`` renders them for the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteQuantReport:
+    """One site's measured precision outcome."""
+
+    site: str
+    precision_bits: int
+    rel_error: float        # ||got - ref|| / ||ref|| vs the f32 oracle
+
+    @property
+    def lowered(self) -> bool:
+        return self.precision_bits < 32
+
+
+def relative_error(got: jnp.ndarray, ref: jnp.ndarray) -> float:
+    """Relative Frobenius error, guarded for an all-zero reference."""
+    got = got.astype(jnp.float32)
+    ref = ref.astype(jnp.float32)
+    return float(jnp.linalg.norm(got - ref) / (jnp.linalg.norm(ref) + 1e-12))
+
+
+def record(report: Dict[str, SiteQuantReport], site: str, bits: int,
+           got: jnp.ndarray, ref: jnp.ndarray) -> None:
+    report[site] = SiteQuantReport(site=site, precision_bits=bits,
+                                   rel_error=relative_error(got, ref))
+
+
+def max_rel_error(report: Dict[str, SiteQuantReport], *,
+                  lowered_only: bool = True) -> float:
+    """Worst per-site error in the report (0.0 when nothing qualifies)."""
+    errs = [r.rel_error for r in report.values()
+            if r.lowered or not lowered_only]
+    return max(errs, default=0.0)
+
+
+def summarize(report: Dict[str, SiteQuantReport]) -> str:
+    lines = []
+    for name in sorted(report):
+        r = report[name]
+        mark = f"int{r.precision_bits}" if r.lowered else "f32"
+        lines.append(f"{name:<40s} {mark:<6s} rel_err={r.rel_error:.2e}")
+    return "\n".join(lines)
