@@ -11,6 +11,10 @@ Paper tables (the reproduction targets):
   table_precision            — the precision ladder: f32-only vs
       ladder-planned networks across the budget ladder (planned cycles,
       measured wall time, and per-site quantization error)
+  table_serving              — the serving runtime: static even budget
+      split vs demand-arbitrated split across a load ladder (overall
+      p95 latency in est-cycles, squeezed-tenant precision mix +
+      measured quant error)
 
 System benches:
   bench_kernels     — us/call for every kernel family member
@@ -255,6 +259,93 @@ def table_precision():
 
 
 # ---------------------------------------------------------------------------
+# Table S — the serving runtime: one constrained device, two tenants,
+# skewed load.  The same request trace is replayed against a static even
+# budget split and the demand arbiter; the arbiter must buy the heavy
+# tenant the fast (VPU-hungry) conv member while the squeezed light
+# tenant degrades its tanh site down the precision ladder (8-bit LUT)
+# instead of failing.  Latency is est-cycles — the planner's own cost
+# model — so policies compare without interpret-mode wall-clock noise.
+# ---------------------------------------------------------------------------
+SERVING_DEVICE_VPU_OPS = 15_000_000
+SERVING_WAVES = 3
+
+
+def _serving_tenants():
+    import jax
+    from repro.models.frontends import init_cnn_frontend
+    heavy = init_cnn_frontend(jax.random.PRNGKey(0), channels=(8, 16),
+                              d_model=32)
+    light = init_cnn_frontend(jax.random.PRNGKey(1), channels=(6, 12),
+                              d_model=16)
+    return heavy, light
+
+
+def _run_serving(policy: str, n_heavy: int, n_light: int, *,
+                 waves: int = SERVING_WAVES):
+    """Replay one skewed trace under one policy; fresh caches so each
+    policy models an independent serving process."""
+    from repro.core.plan import clear_plan_cache
+    from repro.core.resources import ResourceBudget
+    from repro.runtime import AdaptiveServer
+
+    clear_plan_cache()
+    device = ResourceBudget(vpu_ops_budget=SERVING_DEVICE_VPU_OPS)
+    heavy_p, light_p = _serving_tenants()
+    srv = AdaptiveServer(device, policy=policy, max_batch=4)
+    srv.register("vision-heavy", heavy_p, (32, 32, 8))
+    # tanh is the squeeze target: exact evaluation is VPU-expensive, so
+    # a thin slice descends the ladder to the 8-bit LUT member
+    srv.register("edge-light", light_p, (24, 24, 6), activation="tanh",
+                 ladder=(16, 8), measure_quant=True)
+    rng = np.random.default_rng(0)
+    latencies = []
+    t = 0.0
+    for _ in range(waves):
+        for _ in range(n_heavy):
+            srv.submit("vision-heavy",
+                       rng.normal(size=(32, 32, 8)).astype(np.float32), at=t)
+        for _ in range(n_light):
+            srv.submit("edge-light",
+                       rng.normal(size=(24, 24, 6)).astype(np.float32), at=t)
+        latencies += [c.latency for c in srv.step()]
+        t = srv.clock
+    return float(np.percentile(latencies, 95)), srv.telemetry()
+
+
+def table_serving(smoke: bool = False):
+    print("# Table S — serving: static even split vs demand-arbitrated "
+          "budgets on one constrained device (vpu_ops_budget="
+          f"{SERVING_DEVICE_VPU_OPS}); p95 in est-cycles; the "
+          "squeezed tenant must serve at a lowered rung within the 5e-2 "
+          "error bound")
+    mixes = {"skew_10to2": (10, 2)}
+    if not smoke:
+        mixes = {"skew_4to2": (4, 2), **mixes, "skew_16to2": (16, 2)}
+    for mname, (nh, nl) in mixes.items():
+        per_policy = {}
+        for policy in ("static", "demand"):
+            per_policy[policy] = _run_serving(policy, nh, nl)
+        static_p95, _ = per_policy["static"]
+        arb_p95, arb_tel = per_policy["demand"]
+        light = arb_tel["edge-light"]
+        heavy = arb_tel["vision-heavy"]
+        lowered_bits = sorted(b for b in light["precision_mix"] if b < 32)
+        err = light["max_quant_rel_err"]
+        derived = (f"static_p95={static_p95:.3e};arb_p95={arb_p95:.3e}"
+                   f";arb_beats_static={int(arb_p95 < static_p95)}"
+                   f";heavy_grant={heavy['granted_fraction']:.3f}"
+                   f";light_grant={light['granted_fraction']:.3f}"
+                   f";squeezed=edge-light"
+                   f";lowered_bits={'|'.join(map(str, lowered_bits)) or 'none'}"
+                   f";lowered_frac={light['lowered_fraction']:.2f}"
+                   f";max_rel_err={err:.3e};err_ok={int(err <= 5e-2)}"
+                   f";occupancy={heavy['batch_occupancy']:.2f}"
+                   f";cache_hit_rate={heavy['plan_cache_hit_rate']:.2f}")
+        emit(f"table_serving.{mname}", 0.0, derived)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 def bench_kernels():
@@ -352,6 +443,7 @@ BENCHES = {
     "table2": table2_resource_utilization,
     "table3": table3_comparison,
     "table_precision": table_precision,
+    "table_serving": table_serving,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
     "train_step": bench_train_step,
@@ -361,10 +453,14 @@ BENCHES = {
 
 def main(argv=None) -> None:
     import argparse
+    import inspect
     ap = argparse.ArgumentParser(description="paper-table + system benches")
     ap.add_argument("--only", default="",
                     help=f"comma list of benches to run (default all); "
                          f"have: {','.join(BENCHES)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads for CI (benches that "
+                         "support it, e.g. table_serving's single mix)")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write machine-readable rows "
                          "[{name, us_per_call, derived}] to PATH")
@@ -375,7 +471,10 @@ def main(argv=None) -> None:
         raise SystemExit(f"unknown benches {unknown}; have {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name in selected:
-        BENCHES[name]()
+        fn = BENCHES[name]
+        kwargs = ({"smoke": True} if args.smoke
+                  and "smoke" in inspect.signature(fn).parameters else {})
+        fn(**kwargs)
     print(f"# total rows: {len(ROWS)}")
     if args.json:
         rows = [{"name": n, "us_per_call": us, "derived": d}

@@ -126,3 +126,50 @@ def autotune_conv(n: int, h: int, w: int, cin: int, kh: int, kw: int,
     if not res:
         raise ValueError("no feasible conv tiling")
     return res[0]
+
+
+# ---------------------------------------------------------------------------
+# Plan bridge — tile choices for the sites of a NetworkPlan.
+# ---------------------------------------------------------------------------
+# Families/members with sweepable tiling parameters; everything else in a
+# plan runs its member's built-in defaults.
+_TUNABLE = {("conv2d", "ip2_mxu"), ("matmul", "mm_mxu")}
+
+
+def plan_tile_overrides(plan) -> Dict[str, Dict[str, int]]:
+    """Autotuned tiling parameters for the tunable sites of a
+    ``NetworkPlan`` — the bridge from the tuner to executed plans.
+
+    Returns ``{site_name: tiling_kwargs}`` suitable for the
+    ``tile_overrides=`` parameter of ``apply_cnn_block`` /
+    ``apply_cnn_frontend`` (the serving runtime threads it through when
+    its ``autotune=`` flag is on).  Each site is tuned against the slice
+    of the plan's budget the partitioner granted it, so a tuned tiling
+    can never outgrow the envelope the plan certified.  Lowered sites
+    keep their quantized wrappers' defaults, and a site whose sweep
+    finds no feasible tiling is skipped — its member's default already
+    passed the selector's feasibility check.
+    """
+    import numpy as np
+    out: Dict[str, Dict[str, int]] = {}
+    for site in plan.sites:
+        short = site.ip.name.split(".")[-1]
+        if site.lowered or (site.spec.family, short) not in _TUNABLE:
+            continue
+        sub = plan.budget.scaled(site.fraction)
+        itemsize = np.dtype(site.spec.dtype).itemsize
+        try:
+            if site.spec.family == "conv2d":
+                x_shape, w_shape = site.spec.shapes
+                n, h, w = x_shape[0], x_shape[1], x_shape[2]
+                kh, kw, cin, cout = w_shape
+                res = autotune_conv(n, h, w, cin, kh, kw, cout, ip=short,
+                                    itemsize=itemsize, budget=sub)
+            else:
+                a_shape, b_shape = site.spec.shapes
+                res = autotune_matmul(a_shape[-2], a_shape[-1], b_shape[-1],
+                                      itemsize=itemsize, budget=sub)
+        except ValueError:
+            continue
+        out[site.spec.name] = dict(res.params)
+    return out

@@ -26,7 +26,18 @@ the single selection engine behind every family:
 * Plans are memoized on ``(graph-key, budget)`` — repeated trace-time
   calls (e.g. re-tracing ``apply_cnn_block``) are O(1) dict hits with
   zero new footprint evaluations — and serialize to/from JSON for
-  experiment artifacts.
+  experiment artifacts.  The cache is LRU with observable statistics
+  (``plan_cache_stats()``: hits, misses, evictions, occupancy) — the
+  serving runtime surfaces these per tenant.
+* ``replan(specs, new_budget)`` — the live re-planning fast path: when
+  the serving arbiter shifts a tenant's budget slice, the graph is
+  unchanged and only the envelope moved, so the expensive full-budget
+  baseline (one ``_select_site`` per site) is skipped by reusing the
+  graph's memoized *cost shares*; only slice assignment (and, on
+  failure, the needs-floor repair) re-runs under the new budget.
+* ``network_min_fraction(specs, budget)`` — the smallest fraction of a
+  budget under which the graph still plans (ladder rungs included);
+  the arbiter floors each tenant's share here.
 
 Everything here is pure trace-time Python: no jax arrays, no jit.
 """
@@ -40,6 +51,7 @@ from repro.core.ip import IPFamily, KernelIP, SiteSpec
 from repro.core.resources import Footprint, ResourceBudget
 
 _PLAN_CACHE_MAX = 1024
+_SHARE_CACHE_MAX = 1024
 
 
 @dataclasses.dataclass
@@ -49,13 +61,19 @@ class PlannerStats:
     selector_evals: int = 0     # candidate footprints priced by _select
     plan_hits: int = 0
     plan_misses: int = 0
+    plan_evictions: int = 0     # LRU entries displaced at capacity
+    replan_fast: int = 0        # replan() misses served via cached shares
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
 
 
 STATS = PlannerStats()
+# Insertion order is recency order: hits re-insert at the MRU end, and
+# eviction pops the front — a plain dict is the LRU.
 _PLAN_CACHE: Dict[tuple, "NetworkPlan"] = {}
+# graph-key -> normalized full-budget cost shares (the replan fast path).
+_SHARE_CACHE: Dict[tuple, Tuple[float, ...]] = {}
 
 
 def planner_stats() -> PlannerStats:
@@ -64,6 +82,39 @@ def planner_stats() -> PlannerStats:
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _SHARE_CACHE.clear()
+
+
+def plan_cache_stats() -> dict:
+    """Cache observability for serving telemetry: occupancy + counters.
+
+    Counters accumulate since process start (or the last manual reset of
+    ``STATS``); callers wanting a window take two snapshots and diff.
+    """
+    lookups = STATS.plan_hits + STATS.plan_misses
+    return {
+        "size": len(_PLAN_CACHE),
+        "capacity": _PLAN_CACHE_MAX,
+        "hits": STATS.plan_hits,
+        "misses": STATS.plan_misses,
+        "evictions": STATS.plan_evictions,
+        "replan_fast": STATS.replan_fast,
+        "hit_rate": (STATS.plan_hits / lookups) if lookups else 0.0,
+    }
+
+
+def _cache_get(key) -> Optional["NetworkPlan"]:
+    plan = _PLAN_CACHE.pop(key, None)
+    if plan is not None:
+        _PLAN_CACHE[key] = plan        # refresh recency
+    return plan
+
+
+def _cache_put(key, plan: "NetworkPlan") -> None:
+    if key not in _PLAN_CACHE and len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        STATS.plan_evictions += 1
+    _PLAN_CACHE[key] = plan
 
 
 def _get_family(family: Union[str, IPFamily]) -> IPFamily:
@@ -344,16 +395,63 @@ def plan_network(specs: Iterable[SiteSpec],
     """
     budget = budget or ResourceBudget()
     key = (tuple(specs), budget)
-    cached = _PLAN_CACHE.get(key)
+    cached = _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
     STATS.plan_misses += 1
     plan = _plan_uncached(key[0], budget)
-    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
-        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
-    _PLAN_CACHE[key] = plan
+    _cache_put(key, plan)
     return plan
+
+
+def replan(specs: Iterable[SiteSpec],
+           budget: Optional[ResourceBudget] = None) -> "NetworkPlan":
+    """Re-plan a known graph under a moved budget — the serving fast path.
+
+    Exact ``(graph, budget)`` repeats are cache hits like
+    ``plan_network``.  On a miss for a graph planned before, the
+    full-budget baseline (one ladder-descending selection per site —
+    the bulk of a cold plan's footprint evaluations) is skipped by
+    reusing the graph's memoized cost shares; only slice assignment
+    runs under the new budget, with the needs-floor repair on failure.
+    A graph never planned before falls through to ``plan_network``;
+    so do fast-path failures, to surface the canonical errors (or
+    rescue a plan the stale shares missed).
+    """
+    budget = budget or ResourceBudget()
+    specs = tuple(specs)
+    key = (specs, budget)
+    cached = _cache_get(key)
+    if cached is not None:
+        STATS.plan_hits += 1
+        return cached
+    shares = _SHARE_CACHE.get(specs)
+    if shares is None:
+        return plan_network(specs, budget)
+    STATS.plan_misses += 1
+    STATS.replan_fast += 1
+    try:
+        plan = _assign_with_repair(specs, budget, shares)
+    except ValueError:
+        plan = _plan_uncached(specs, budget)
+    _cache_put(key, plan)
+    return plan
+
+
+def network_min_fraction(specs: Iterable[SiteSpec],
+                         budget: Optional[ResourceBudget] = None) -> float:
+    """Smallest fraction of ``budget`` under which ``specs`` still plans.
+
+    The budget partitioner grants every site at least the minimal slice
+    its cheapest member (at its cheapest legal ladder width) needs, so a
+    scaled-down envelope is feasible exactly while those per-site minima
+    still sum within it.  The serving arbiter floors each tenant's share
+    here — with a ladder, the floor already reflects the narrowest rung
+    the tenant tolerates (degrade-before-fail).
+    """
+    budget = budget or ResourceBudget()
+    return min(1.0, sum(_site_need(s, budget) for s in specs))
 
 
 def plan_single(spec: SiteSpec,
@@ -363,6 +461,49 @@ def plan_single(spec: SiteSpec,
     needing only the member read ``.ip``; the quantized wrappers also
     read ``.precision_bits`` to decide whether to lower execution."""
     return plan_network((spec,), budget).site(spec.name)
+
+
+def _try_assign(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
+                fractions: Sequence[float]):
+    planned, failed = [], []
+    for spec, frac in zip(specs, fractions):
+        try:
+            ip, fp, bits = _select_site(spec, budget.scaled(frac))
+            planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
+                                       fraction=frac,
+                                       precision_bits=bits))
+        except ValueError:
+            planned.append(None)
+            failed.append(spec.name)
+    return planned, failed
+
+
+def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
+                        shares: Sequence[float]) -> NetworkPlan:
+    """Slice assignment under cost ``shares``, with the greedy repair:
+    if any site has no feasible member under its proportional slice,
+    every site is floored at the minimal slice its cheapest member (at
+    its cheapest legal width) needs and only the surplus follows the
+    shares."""
+    planned, failed = _try_assign(specs, budget, shares)
+    if failed:
+        needs = [_site_need(s, budget) for s in specs]
+        total_need = sum(needs)
+        if total_need > 1.0 + 1e-9:
+            raise ValueError(
+                f"no feasible network plan under budget {budget}: sites "
+                f"{[s.name for s in specs]} jointly need {total_need:.3f}x "
+                f"the envelope "
+                f"(per-site minima {['%.3f' % n for n in needs]})")
+        surplus = 1.0 - total_need
+        fractions = [need + surplus * share
+                     for need, share in zip(needs, shares)]
+        planned, failed = _try_assign(specs, budget, fractions)
+        if failed:  # pragma: no cover — needs floor guarantees feasibility
+            raise ValueError(
+                f"budget partition repair failed for sites {failed} under "
+                f"{budget}")
+    return NetworkPlan(budget=budget, sites=tuple(planned))
 
 
 def _plan_uncached(specs: Tuple[SiteSpec, ...],
@@ -380,42 +521,15 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...],
     base = [_select_site(s, budget) for s in specs]
     costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp, _ in base]
     total_cost = sum(costs) or 1.0
-    fractions = [c / total_cost for c in costs]
-
-    def try_assign(fracs):
-        planned, failed = [], []
-        for spec, frac in zip(specs, fracs):
-            try:
-                ip, fp, bits = _select_site(spec, budget.scaled(frac))
-                planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
-                                           fraction=frac,
-                                           precision_bits=bits))
-            except ValueError:
-                planned.append(None)
-                failed.append(spec.name)
-        return planned, failed
-
-    planned, failed = try_assign(fractions)
-    if failed:
-        # 2) Greedy repair: floor each site at the minimal slice its
-        #    cheapest member (at its cheapest legal width) needs; only
-        #    the surplus follows cost shares.
-        needs = [_site_need(s, budget) for s in specs]
-        total_need = sum(needs)
-        if total_need > 1.0 + 1e-9:
-            raise ValueError(
-                f"no feasible network plan under budget {budget}: sites "
-                f"{names} jointly need {total_need:.3f}x the envelope "
-                f"(per-site minima {['%.3f' % n for n in needs]})")
-        surplus = 1.0 - total_need
-        fractions = [need + surplus * (c / total_cost)
-                     for need, c in zip(needs, costs)]
-        planned, failed = try_assign(fractions)
-        if failed:  # pragma: no cover — needs floor guarantees feasibility
-            raise ValueError(
-                f"budget partition repair failed for sites {failed} under "
-                f"{budget}")
-    return NetworkPlan(budget=budget, sites=tuple(planned))
+    shares = tuple(c / total_cost for c in costs)
+    # Memoize the shares for replan(): they shift a little across
+    # budgets (the baseline winners may differ), but stay a sound
+    # starting assignment — the repair pass recomputes exact needs
+    # under whatever budget replan() is handed.
+    if specs not in _SHARE_CACHE and len(_SHARE_CACHE) >= _SHARE_CACHE_MAX:
+        _SHARE_CACHE.pop(next(iter(_SHARE_CACHE)))
+    _SHARE_CACHE[specs] = shares
+    return _assign_with_repair(specs, budget, shares)
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,14 @@ _DUAL = {"ip3_packed": conv2d_ip3, "ip4_dual": conv2d_ip4}
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
            budget: Optional[ResourceBudget] = None, ladder=(),
-           interpret: bool = True) -> jnp.ndarray:
-    """Single-stream convolution through a selected IP (Conv1/Conv2)."""
+           interpret: bool = True, **tile_kwargs) -> jnp.ndarray:
+    """Single-stream convolution through a selected IP (Conv1/Conv2).
+
+    ``tile_kwargs`` forward tiling parameters to the member (e.g.
+    ``block_cout=`` for ``ip2_mxu``, typically from
+    ``core.autotune.plan_tile_overrides``); pass them only with an
+    explicit ``ip=`` or a plan known to pick a member that accepts them.
+    """
     if ip is None:
         from repro.core.ip import SiteSpec
         from repro.core.plan import plan_single
@@ -44,7 +50,7 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
     if ip not in _SINGLE:
         raise KeyError(f"{ip!r} is not a single-stream conv IP "
                        f"(have {sorted(_SINGLE)})")
-    return _SINGLE[ip](x, w, interpret=interpret)
+    return _SINGLE[ip](x, w, interpret=interpret, **tile_kwargs)
 
 
 def conv2d_dual(xa: jnp.ndarray, xb: jnp.ndarray, w: jnp.ndarray, *,

@@ -187,7 +187,7 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     pool_stride=None, pool_mode: str = "max",
                     activation: str = "relu", interpret: bool = True,
                     plan=None, site: str = "cnn_block", network=None,
-                    ladder=(), quant_report=None):
+                    ladder=(), quant_report=None, tile_overrides=None):
     """One adaptive CNN layer: conv -> pool -> activation.
 
     The three sites are planned as one ``NetworkPlan`` under a
@@ -208,6 +208,11 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
     dequantize at its egress.  ``quant_report`` (a dict) receives a
     ``SiteQuantReport`` per site — the measured relative error vs the
     family oracles evaluated in float32.
+
+    ``tile_overrides`` maps site name -> tiling kwargs for that site's
+    kernel call (e.g. ``{"cnn_block.conv": {"block_cout": 256}}`` from
+    ``core.autotune.plan_tile_overrides``); only full-precision sites
+    honor them — the quantized wrappers keep their members' defaults.
     """
     from repro.core.plan import plan_network
     from repro.kernels.activation.ops import activation as activation_op
@@ -265,7 +270,8 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                                      ip=conv_s.ip.name, interpret=interpret,
                                      return_scale=True)
     else:
-        y = conv2d(x, p["w"], ip=conv_s.ip.name, interpret=interpret)
+        y = conv2d(x, p["w"], ip=conv_s.ip.name, interpret=interpret,
+                   **dict((tile_overrides or {}).get(conv_s.spec.name, {})))
     if quant_report is not None:
         got = y if qscale is None else y.astype(jnp.float32) * qscale
         record(quant_report, conv_s.spec.name, conv_s.precision_bits,

@@ -87,7 +87,8 @@ def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
 
 def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
                        activation: str = "relu", interpret: bool = True,
-                       plan=None, ladder=(), quant_report=None):
+                       plan=None, ladder=(), quant_report=None,
+                       network=None, tile_overrides=None):
     """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model).
 
     The entire stack (every conv/pool/act of every block) is planned as
@@ -97,24 +98,34 @@ def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
     planned widths (see ``apply_cnn_block``) and ``quant_report``
     collects the per-site measured error across the whole stack.
 
+    ``network`` executes from an externally built/arbitrated plan
+    instead of planning here (the serving runtime's entry point —
+    it re-plans tenants under moving budget slices via
+    ``core.plan.replan`` and hands the result in); every block still
+    validates its sites against the supplied plan.  ``tile_overrides``
+    threads per-site tiling kwargs down to the kernels
+    (``core.autotune.plan_tile_overrides``).
+
     NOTE the lowered blocks dequantize at their egress, so the ladder
     never changes this function's output dtype — only its accuracy,
     which the report quantifies.
     """
     from repro.core.plan import plan_network
     from repro.models.blocks import apply_cnn_block
-    network = plan_network(
-        cnn_frontend_site_specs(p, images.shape, images.dtype,
-                                pool_window=pool_window,
-                                activation=activation, ladder=ladder),
-        budget)
+    if network is None:
+        network = plan_network(
+            cnn_frontend_site_specs(p, images.shape, images.dtype,
+                                    pool_window=pool_window,
+                                    activation=activation, ladder=ladder),
+            budget)
     x = images
     for li, bp in enumerate(p["blocks"]):
         x = apply_cnn_block(bp, x, pool_window=pool_window,
                             activation=activation, interpret=interpret,
                             plan=plan, site=f"frontend.block{li}",
                             network=network, ladder=ladder,
-                            quant_report=quant_report)
+                            quant_report=quant_report,
+                            tile_overrides=tile_overrides)
     b, h, w, c = x.shape
     tokens = x.reshape(b, h * w, c)
     return jnp.einsum("bsc,cd->bsd", tokens, p["proj"].astype(x.dtype))

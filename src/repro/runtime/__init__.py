@@ -1,0 +1,17 @@
+"""Serving + reliability runtime.
+
+``server.py``/``arbiter.py``/``batching.py``/``telemetry.py`` form the
+adaptive-IP serving subsystem — multi-tenant budget arbitration,
+shape-bucketed batching, live re-planning (docs/adaptive_ips.md,
+"Serving runtime contract").  ``fault_tolerance.py`` holds the
+watchdog / straggler / elastic-remesh hooks.
+"""
+from repro.runtime.arbiter import BudgetArbiter, TenantShare
+from repro.runtime.batching import Request, ShapeBucketQueue
+from repro.runtime.server import AdaptiveServer, Completion, Tenant
+from repro.runtime.telemetry import TenantTelemetry
+
+__all__ = [
+    "AdaptiveServer", "BudgetArbiter", "Completion", "Request",
+    "ShapeBucketQueue", "Tenant", "TenantShare", "TenantTelemetry",
+]

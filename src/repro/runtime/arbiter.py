@@ -1,0 +1,152 @@
+"""Budget arbitration across co-resident tenants.
+
+The paper sizes ONE network against the device's resources; a serving
+deployment runs several at once.  The arbiter is ``plan_network``'s
+partitioning logic lifted one level: the device ``ResourceBudget`` is
+split across registered tenants proportional to *observed demand* (an
+EWMA of the work each tenant submits), with every tenant floored at the
+minimal fraction its network can still plan under
+(``core.plan.network_min_fraction``).  Because that floor descends each
+site's precision ladder, a tenant squeezed below its f32 footprint is
+granted a slice where it *degrades to int16/int8* instead of failing —
+the paper's resource-driven adaptation, made dynamic.
+
+Hysteresis: grants only move when some tenant's target drifts more than
+``rebalance_threshold`` from its current grant.  Every rebalance makes
+the server re-plan its tenants under the new slices
+(``core.plan.replan``), so the threshold is the knob trading
+steady-state optimality against re-plan churn.
+
+Pure trace-time Python; deterministic given the observation sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.resources import ResourceBudget
+
+POLICIES = ("demand", "static")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantShare:
+    """One tenant's slice of the device at one arbitration round."""
+
+    name: str
+    demand: float       # EWMA of submitted work (est-cycles)
+    floor: float        # minimal feasible fraction (ladder included)
+    fraction: float     # granted fraction of the device budget
+
+
+class BudgetArbiter:
+    """Splits one device budget across tenants; see module docstring.
+
+    ``policy="demand"`` is the headline arbitration;
+    ``policy="static"`` grants an even 1/n split regardless of demand
+    or floors — the baseline the benchmarks compare against.
+    """
+
+    def __init__(self, budget: Optional[ResourceBudget] = None, *,
+                 policy: str = "demand", rebalance_threshold: float = 0.05,
+                 demand_alpha: float = 0.5):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
+        if not 0.0 < demand_alpha <= 1.0:
+            raise ValueError("demand_alpha must be in (0, 1]")
+        self.budget = budget or ResourceBudget()
+        self.policy = policy
+        self.rebalance_threshold = rebalance_threshold
+        self.demand_alpha = demand_alpha
+        self._floors: Dict[str, float] = {}
+        self._demand: Dict[str, float] = {}
+        self._pending: Dict[str, float] = {}
+        self._granted: Dict[str, float] = {}
+        self.rebalances = 0
+
+    def register(self, name: str, floor: float = 0.0) -> None:
+        """Admit one tenant.  Validates the whole tenant set *before*
+        mutating any state, so a rejected registration leaves no ghost
+        entry behind."""
+        if name in self._floors:
+            raise ValueError(f"tenant {name!r} already registered")
+        floor = min(max(float(floor), 0.0), 1.0)
+        floors = {**self._floors, name: floor}
+        if self.policy == "demand":
+            total = sum(floors.values())
+            if total > 1.0 + 1e-9:
+                raise ValueError(
+                    f"tenant floors jointly need {total:.3f}x the device "
+                    f"budget — co-residency infeasible even at the "
+                    f"narrowest ladder rungs: {floors}")
+        else:
+            # static grants an unconditional 1/n: a tenant whose floor
+            # exceeds that can never serve — reject at admission, same
+            # honesty as the demand-policy joint check.
+            even = 1.0 / len(floors)
+            bad = {m: f for m, f in floors.items() if f > even + 1e-9}
+            if bad:
+                raise ValueError(
+                    f"static even split grants {even:.3f} per tenant, "
+                    f"below the minimal feasible fraction of: {bad}")
+        self._floors[name] = floor
+        self._demand[name] = 0.0
+        self._pending[name] = 0.0
+
+    def observe(self, name: str, cost: float) -> None:
+        """Record submitted work (est-cycles) for one tenant; folded
+        into the demand EWMA at the next ``split()``."""
+        self._pending[name] += float(cost)
+
+    def _targets(self) -> Dict[str, float]:
+        names = list(self._floors)
+        n = len(names)
+        if self.policy == "static":
+            return {m: 1.0 / n for m in names}
+        total_floor = sum(self._floors.values())
+        total_demand = sum(self._demand.values())
+        if total_demand <= 0.0:
+            raw = {m: 1.0 / n for m in names}
+        else:
+            raw = {m: self._demand[m] / total_demand for m in names}
+        surplus = max(0.0, 1.0 - total_floor)
+        return {m: self._floors[m] + surplus * raw[m] for m in names}
+
+    def split(self) -> Dict[str, TenantShare]:
+        """Fold pending observations into the EWMA and (re)grant.
+
+        The first call always grants; later calls move the grants only
+        when some tenant's target drifted more than
+        ``rebalance_threshold`` from its current grant (then every
+        grant snaps to target, counted in ``rebalances``).  A change in
+        the tenant *set* (a registration since the last round) always
+        re-grants — hysteresis only ever holds a split that covers
+        every current tenant.
+        """
+        if not self._floors:
+            return {}
+        a = self.demand_alpha
+        for name, pend in self._pending.items():
+            self._demand[name] = (1 - a) * self._demand[name] + a * pend
+            self._pending[name] = 0.0
+        targets = self._targets()
+        if set(self._granted) != set(targets):
+            was_granted = bool(self._granted)
+            self._granted = dict(targets)
+            if was_granted:
+                self.rebalances += 1
+        elif any(abs(targets[m] - self._granted[m])
+                 > self.rebalance_threshold for m in targets):
+            self._granted = dict(targets)
+            self.rebalances += 1
+        return {m: TenantShare(name=m, demand=self._demand[m],
+                               floor=self._floors[m],
+                               fraction=self._granted[m])
+                for m in self._floors}
+
+    def budget_for(self, name: str) -> ResourceBudget:
+        """The device-budget slice currently granted to ``name``."""
+        if name not in self._granted:
+            raise KeyError(f"tenant {name!r} has no grant yet "
+                           f"(call split() first)")
+        return self.budget.scaled(self._granted[name])

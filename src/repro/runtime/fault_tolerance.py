@@ -33,8 +33,25 @@ class Watchdog:
     def beat(self):
         self._last_beat = time.monotonic()
 
-    def stop(self):
+    def stop(self) -> bool:
+        """Stop monitoring and join the monitor thread.
+
+        After ``stop()`` returns, no *new* ``on_timeout`` fires: the
+        loop re-checks the stop flag right before firing (closing the
+        window where the wait timed out just as ``stop`` was called).
+        The join is bounded by ``max(timeout_s, 1.0)`` so a wedged
+        callback cannot hang the caller; the return value reports
+        whether the monitor actually terminated (``False`` means a
+        callback was still in flight when the join timed out).  Safe to
+        call before ``start()``, more than once, and from inside
+        ``on_timeout`` itself (the fire-once pattern) — the monitor
+        thread never joins itself.
+        """
         self._stop.set()
+        if (self._thread.ident is not None and self._thread.is_alive()
+                and self._thread is not threading.current_thread()):
+            self._thread.join(timeout=max(self.timeout_s, 1.0))
+        return not self._thread.is_alive()
 
     @property
     def fired(self) -> bool:
@@ -42,7 +59,8 @@ class Watchdog:
 
     def _loop(self):
         while not self._stop.wait(min(self.timeout_s / 4, 1.0)):
-            if time.monotonic() - self._last_beat > self.timeout_s:
+            if (time.monotonic() - self._last_beat > self.timeout_s
+                    and not self._stop.is_set()):
                 self._fired = True
                 self.on_timeout()
                 self._last_beat = time.monotonic()

@@ -1,0 +1,280 @@
+"""AdaptiveServer — multi-tenant serving over the adaptive-IP planner.
+
+The paper's claim is that IPs adapt to the resources *actually
+available*; offline that meant one ``plan_network`` call against one
+static budget.  This server makes the claim dynamic: several registered
+CNN frontends ("tenants") share one device ``ResourceBudget``, a
+``BudgetArbiter`` splits it proportional to observed demand (floored at
+each tenant's minimal feasible fraction, ladder rungs included), and
+when the split shifts the affected tenants are *live re-planned*
+through ``core.plan.replan`` — a tenant squeezed below its f32
+footprint degrades to int16/int8 execution instead of failing.
+
+Time model: latency is accounted in **estimated cycles**, the same cost
+model the planner optimizes.  Each tenant owns a serving lane (its
+spatial slice of the device, the FPGA-region analogy): batches of a
+lane execute sequentially, a batch occupies the lane for its plan's
+``total_cycles``, and a request's latency is queue wait plus service.
+Numerics are real — every batch runs its planned Pallas kernels — only
+*time* is modeled, which keeps policies comparable without wall-clock
+noise from the interpret-mode substrate.
+
+Requests are shape-bucketed (``batching.py``): same-shaped samples of a
+tenant stack into one planned execution, so repeat batch shapes hit the
+plan cache with zero selector work.  With ``autotune=True`` the tunable
+sites of each executed plan run sweep-chosen tilings
+(``core.autotune.plan_tile_overrides``) instead of member defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.plan import (STATS, network_min_fraction, plan_network,
+                             replan)
+from repro.core.resources import ResourceBudget
+from repro.models.frontends import apply_cnn_frontend, cnn_frontend_site_specs
+from repro.runtime.arbiter import BudgetArbiter, TenantShare
+from repro.runtime.batching import Request, ShapeBucketQueue
+from repro.runtime.telemetry import TenantTelemetry
+
+_SIDE_CACHE_MAX = 256   # bound for the tile- and specs-caches
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One registered CNN frontend and its serving state."""
+
+    name: str
+    params: Any
+    input_shape: Tuple[int, ...]        # per-sample (H, W, C)
+    pool_window: Tuple[int, int]
+    activation: str
+    ladder: Tuple[int, ...]
+    measure_quant: bool
+    floor: float                        # min feasible device fraction
+    unit_cost: float                    # est-cycles of one request, ample
+    granted: float = 0.0                # current device fraction
+    lane_free: float = 0.0              # when this lane next idles (cycles)
+    telemetry: TenantTelemetry = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """One served request: result + accounting."""
+
+    rid: int
+    tenant: str
+    result: Any                         # (S, d_model) patch embeddings
+    arrival: float
+    finished: float
+    batch_size: int
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+class AdaptiveServer:
+    """Admit, batch, arbitrate, re-plan, execute.  See module docstring.
+
+    ``policy="demand"`` arbitrates; ``policy="static"`` is the even-split
+    baseline.  ``autotune=True`` swaps member-default tilings for
+    sweep-chosen ones on the tunable sites of every executed plan.
+    """
+
+    def __init__(self, budget: Optional[ResourceBudget] = None, *,
+                 policy: str = "demand", rebalance_threshold: float = 0.05,
+                 max_batch: int = 4, autotune: bool = False,
+                 interpret: bool = True, demand_alpha: float = 0.5):
+        self.budget = budget or ResourceBudget()
+        self.arbiter = BudgetArbiter(self.budget, policy=policy,
+                                     rebalance_threshold=rebalance_threshold,
+                                     demand_alpha=demand_alpha)
+        self.max_batch = max_batch
+        self.autotune = autotune
+        self.interpret = interpret
+        self.clock = 0.0
+        self.tenants: Dict[str, Tenant] = {}
+        self._queue = ShapeBucketQueue()
+        self._shares: Dict[str, TenantShare] = {}
+        self._tile_cache: Dict[tuple, dict] = {}
+        # bucket key -> site specs: spec construction runs jax.eval_shape
+        # per block, so hot repeat buckets must not rebuild them
+        self._specs_cache: Dict[tuple, tuple] = {}
+        self._next_rid = 0
+
+    # -- admission ----------------------------------------------------------
+    def register(self, name: str, params, input_shape, *,
+                 pool_window=(2, 2), activation: str = "relu",
+                 ladder: Tuple[int, ...] = (),
+                 measure_quant: bool = False) -> Tenant:
+        """Register a CNN frontend as a tenant.
+
+        Prices the tenant up front: its *floor* (minimal feasible device
+        fraction at max batch, ladder included — what the arbiter must
+        always grant) and its *unit cost* (est-cycles of a one-sample
+        plan under the full device, the demand weight).  Raises the
+        planner's error when the tenant cannot run even with the whole
+        device to itself — admission fails honestly.
+        """
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        input_shape = tuple(int(d) for d in input_shape)
+        canonical = self._specs(params, (self.max_batch,) + input_shape,
+                                "float32", pool_window, activation, ladder)
+        # Admission check: both the max-batch and the one-sample graphs
+        # must plan under the full device (raises the planner's
+        # canonical error otherwise) — and both plans warm the share
+        # cache for the replan fast path.
+        plan_network(canonical, self.budget)
+        floor = network_min_fraction(canonical, self.budget)
+        unit = plan_network(
+            self._specs(params, (1,) + input_shape, "float32",
+                        pool_window, activation, ladder),
+            self.budget).total_cycles
+        tenant = Tenant(name=name, params=params, input_shape=input_shape,
+                        pool_window=tuple(pool_window), activation=activation,
+                        ladder=tuple(ladder), measure_quant=measure_quant,
+                        floor=floor, unit_cost=unit,
+                        telemetry=TenantTelemetry(name=name,
+                                                  max_batch=self.max_batch))
+        self.arbiter.register(name, floor)
+        self.tenants[name] = tenant
+        return tenant
+
+    @staticmethod
+    def _specs(params, batch_shape, dtype, pool_window, activation, ladder):
+        return tuple(cnn_frontend_site_specs(
+            params, batch_shape, dtype, pool_window=tuple(pool_window),
+            activation=activation, ladder=tuple(ladder)))
+
+    def submit(self, name: str, x, *, at: Optional[float] = None):
+        """Queue one sample (H, W, C) — or a (B, H, W, C) stack, queued
+        as B independent requests — arriving at clock ``at`` (default:
+        now).  Returns the request id (or list of ids)."""
+        tenant = self.tenants[name]
+        x = jnp.asarray(x)
+        if x.ndim == len(tenant.input_shape) + 1:
+            return [self.submit(name, xi, at=at) for xi in x]
+        if x.shape != tenant.input_shape:
+            raise ValueError(
+                f"tenant {name!r} expects samples of shape "
+                f"{tenant.input_shape}, got {x.shape}")
+        arrival = self.clock if at is None else float(at)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.push(Request(rid=rid, tenant=name, x=x, arrival=arrival))
+        self.arbiter.observe(name, tenant.unit_cost)
+        return rid
+
+    # -- serving ------------------------------------------------------------
+    def step(self) -> List[Completion]:
+        """One serving round: arbitrate, then drain every bucket.
+
+        Re-grants move tenant budget slices; a moved slice re-plans the
+        tenant's graphs on their next batch (the ``replan`` fast path —
+        counted in telemetry as a re-plan when the tenant had already
+        been granted before).
+        """
+        if not self._queue:
+            return []
+        self._shares = self.arbiter.split()
+        for name, share in self._shares.items():
+            t = self.tenants[name]
+            if t.granted and abs(share.fraction - t.granted) > 1e-12:
+                t.telemetry.replans += 1
+            t.granted = share.fraction
+        completions: List[Completion] = []
+        for key in self._queue.keys():
+            while True:
+                batch = self._queue.pop_batch(key, self.max_batch)
+                if not batch:
+                    break
+                completions.extend(self._execute(batch))
+        if completions:
+            self.clock = max(self.clock,
+                             max(c.finished for c in completions))
+        return completions
+
+    def drain(self, max_steps: int = 1000) -> List[Completion]:
+        out: List[Completion] = []
+        for _ in range(max_steps):
+            if not self._queue:
+                break
+            out.extend(self.step())
+        return out
+
+    def _execute(self, batch: List[Request]) -> List[Completion]:
+        tenant = self.tenants[batch[0].tenant]
+        xb = jnp.stack([r.x for r in batch])
+        slice_budget = self.budget.scaled(tenant.granted)
+        skey = (tenant.name, xb.shape, str(xb.dtype))
+        specs = self._specs_cache.get(skey)
+        if specs is None:
+            specs = self._specs(tenant.params, xb.shape, xb.dtype,
+                                tenant.pool_window, tenant.activation,
+                                tenant.ladder)
+            if len(self._specs_cache) >= _SIDE_CACHE_MAX:
+                self._specs_cache.pop(next(iter(self._specs_cache)))
+            self._specs_cache[skey] = specs
+        hits0, misses0 = STATS.plan_hits, STATS.plan_misses
+        plan = replan(specs, slice_budget)
+        tile_overrides = None
+        if self.autotune:
+            tkey = (specs, slice_budget)
+            tile_overrides = self._tile_cache.get(tkey)
+            if tile_overrides is None:
+                from repro.core.autotune import plan_tile_overrides
+                tile_overrides = plan_tile_overrides(plan)
+                if len(self._tile_cache) >= _SIDE_CACHE_MAX:
+                    self._tile_cache.pop(next(iter(self._tile_cache)))
+                self._tile_cache[tkey] = tile_overrides
+        quant_report = {} if (tenant.ladder and tenant.measure_quant) else None
+        y = apply_cnn_frontend(tenant.params, xb, network=plan,
+                               pool_window=tenant.pool_window,
+                               activation=tenant.activation,
+                               interpret=self.interpret,
+                               ladder=tenant.ladder,
+                               quant_report=quant_report,
+                               tile_overrides=tile_overrides)
+        start = max(tenant.lane_free, max(r.arrival for r in batch))
+        finish = start + plan.total_cycles
+        tenant.lane_free = finish
+        latencies = [finish - r.arrival for r in batch]
+        quant_err = 0.0
+        if quant_report:
+            from repro.quant.report import max_rel_error
+            quant_err = max_rel_error(quant_report)
+        tenant.telemetry.record_batch(
+            len(batch), latencies, plan,
+            cache_hits=STATS.plan_hits - hits0,
+            cache_misses=STATS.plan_misses - misses0,
+            quant_err=quant_err)
+        return [Completion(rid=r.rid, tenant=r.tenant, result=y[i],
+                           arrival=r.arrival, finished=finish,
+                           batch_size=len(batch))
+                for i, r in enumerate(batch)]
+
+    # -- observability ------------------------------------------------------
+    def shares(self) -> Dict[str, TenantShare]:
+        """The latest arbitration round's grants (empty before a step)."""
+        return dict(self._shares)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def telemetry(self) -> Dict[str, dict]:
+        """Per-tenant snapshot: latency percentiles (est-cycles),
+        batch occupancy, precision mix, re-plans, plan-cache hit rate,
+        measured quantization error, and the current grant/floor."""
+        out = {}
+        for name, t in self.tenants.items():
+            snap = t.telemetry.snapshot()
+            snap["granted_fraction"] = t.granted
+            snap["floor_fraction"] = t.floor
+            snap["unit_cost_cycles"] = t.unit_cost
+            out[name] = snap
+        return out

@@ -1,0 +1,95 @@
+"""Per-tenant serving telemetry.
+
+Latency is measured in *estimated cycles* — the same cost model the
+planner optimizes (``Footprint.est_cycles``), so arbitration policies
+are comparable without wall-clock noise from the interpret-mode CPU
+substrate.  Precision mix counts planned-site executions per operand
+width (how often the tenant actually served lowered), and the plan-cache
+columns are windowed deltas of ``core.plan.plan_cache_stats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List
+
+# Percentiles are computed over the most recent window rather than the
+# full request history, so a long-lived server's memory stays bounded
+# (the same treatment the plan cache gets in core/plan.py).
+LATENCY_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class TenantTelemetry:
+    """Counters one ``AdaptiveServer`` keeps per registered tenant."""
+
+    name: str
+    max_batch: int
+    requests: int = 0
+    batches: int = 0
+    occupancy_sum: float = 0.0
+    latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    precision_mix: Dict[int, int] = dataclasses.field(default_factory=dict)
+    replans: int = 0            # grant moves that forced a re-plan
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    max_quant_rel_err: float = 0.0
+
+    def record_batch(self, batch_size: int, latencies: List[float],
+                     plan, *, cache_hits: int, cache_misses: int,
+                     quant_err: float = 0.0) -> None:
+        self.requests += batch_size
+        self.batches += 1
+        self.occupancy_sum += batch_size / self.max_batch
+        self.latencies.extend(latencies)
+        for site in plan.sites:
+            bits = site.precision_bits
+            self.precision_mix[bits] = self.precision_mix.get(bits, 0) + 1
+        self.plan_cache_hits += cache_hits
+        self.plan_cache_misses += cache_misses
+        self.max_quant_rel_err = max(self.max_quant_rel_err, quant_err)
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean fill of executed batches, in [1/max_batch, 1]."""
+        return self.occupancy_sum / self.batches if self.batches else 0.0
+
+    @property
+    def lowered_fraction(self) -> float:
+        """Fraction of planned-site executions that ran below 32 bits."""
+        total = sum(self.precision_mix.values())
+        low = sum(n for b, n in self.precision_mix.items() if b < 32)
+        return low / total if total else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile (0..100) of request latency in est-cycles,
+        over the most recent ``LATENCY_WINDOW`` requests."""
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        if len(xs) == 1:
+            return xs[0]
+        pos = (q / 100.0) * (len(xs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+    def snapshot(self) -> dict:
+        cache_lookups = self.plan_cache_hits + self.plan_cache_misses
+        return {
+            "name": self.name,
+            "requests": self.requests,
+            "batches": self.batches,
+            "batch_occupancy": self.batch_occupancy,
+            "p50_cycles": self.latency_percentile(50),
+            "p95_cycles": self.latency_percentile(95),
+            "precision_mix": dict(sorted(self.precision_mix.items())),
+            "lowered_fraction": self.lowered_fraction,
+            "replans": self.replans,
+            "plan_cache_hits": self.plan_cache_hits,
+            "plan_cache_misses": self.plan_cache_misses,
+            "plan_cache_hit_rate": (self.plan_cache_hits / cache_lookups
+                                    if cache_lookups else 0.0),
+            "max_quant_rel_err": self.max_quant_rel_err,
+        }

@@ -1,0 +1,179 @@
+"""core/autotune.py: candidate generation, feasibility, ranking, and
+the bridge from tuned tilings into executed plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (_aligned, autotune_conv, autotune_flash,
+                                 autotune_matmul, plan_tile_overrides, sweep)
+from repro.core.ip import SiteSpec
+from repro.core.plan import plan_network
+from repro.core.resources import MXU_DIM, ResourceBudget
+
+
+# --------------------------------------------------------------------------
+# Aligned-candidate generation
+# --------------------------------------------------------------------------
+def test_aligned_doubles_within_range():
+    assert _aligned(128, 1024, 128) == [128, 256, 512, 1024]
+    assert _aligned(128, 1000, 128) == [128, 256, 512]
+    # lo excludes the small candidates
+    assert _aligned(256, 1024, 128) == [256, 512, 1024]
+
+
+def test_aligned_falls_back_to_alignment_when_range_is_empty():
+    # nothing in [256, 200] — the alignment itself is the fallback
+    assert _aligned(256, 200, 128) == [128]
+    assert _aligned(1, 64, 128) == [128]
+
+
+def test_aligned_candidates_are_multiples_of_alignment():
+    for lo, hi in [(128, 4096), (8, 512), (128, 100)]:
+        for v in _aligned(lo, hi, MXU_DIM):
+            assert v % MXU_DIM == 0
+
+
+# --------------------------------------------------------------------------
+# Sweep: feasibility gate + est_cycles ranking
+# --------------------------------------------------------------------------
+def test_sweep_ranks_feasible_tilings_by_est_cycles():
+    from repro.kernels.matmul.mxu import footprint_mxu
+    budget = ResourceBudget()
+    grid = {"bm": [128, 256], "bn": [128, 256], "bk": [128, 256]}
+    res = sweep(footprint_mxu, grid, budget, 512, 512, 512, top=8,
+                itemsize=2)
+    assert res
+    cycles = [r.est_cycles for r in res]
+    assert cycles == sorted(cycles)
+    for r in res:
+        assert r.footprint.fits(budget)
+        assert r.est_cycles == r.footprint.est_cycles
+
+
+def test_sweep_excludes_tilings_that_do_not_fit():
+    from repro.kernels.matmul.mxu import footprint_mxu
+    tight = ResourceBudget(vmem_bytes=200 * 1024)
+    grid = {"bm": [128, 1024], "bn": [128, 1024], "bk": [128, 1024]}
+    res = sweep(footprint_mxu, grid, tight, 1024, 1024, 1024, top=100,
+                itemsize=2)
+    assert res
+    for r in res:
+        assert r.footprint.fits(tight)
+        # the 1024^3 tile (6 MiB of operands) must have been dropped
+        assert not (r.params["bm"] == r.params["bn"]
+                    == r.params["bk"] == 1024)
+
+
+# --------------------------------------------------------------------------
+# Family entry points
+# --------------------------------------------------------------------------
+def test_autotune_matmul_respects_tight_vmem():
+    ample = autotune_matmul(1024, 1024, 1024, itemsize=2)
+    tight_budget = ResourceBudget(vmem_bytes=200 * 1024)
+    tight = autotune_matmul(1024, 1024, 1024, itemsize=2,
+                            budget=tight_budget)
+    assert tight.footprint.fits(tight_budget)
+    assert tight.footprint.vmem_bytes <= 200 * 1024
+    # the unconstrained pick is at least as fast (it saw a superset of
+    # feasible tilings)
+    assert ample.est_cycles <= tight.est_cycles
+
+
+def test_autotune_matmul_infeasible_raises():
+    with pytest.raises(ValueError, match="no feasible matmul tiling"):
+        autotune_matmul(1024, 1024, 1024, itemsize=2,
+                        budget=ResourceBudget(vmem_bytes=1024))
+
+
+def test_autotune_conv_fits_and_aligns():
+    budget = ResourceBudget()
+    res = autotune_conv(2, 16, 16, 8, 3, 3, 256, itemsize=4, budget=budget)
+    assert res.params["block_cout"] % 128 == 0
+    assert res.footprint.fits(budget)
+
+
+def test_autotune_flash_fits_budget():
+    budget = ResourceBudget()
+    res = autotune_flash(1, 4, 2, 512, 512, 64, itemsize=2, budget=budget)
+    assert set(res.params) == {"bq", "bk"}
+    assert res.footprint.fits(budget)
+
+
+# --------------------------------------------------------------------------
+# plan_tile_overrides: tuner -> executed plans
+# --------------------------------------------------------------------------
+def test_plan_tile_overrides_covers_tunable_sites_only():
+    specs = [
+        SiteSpec.make("net.conv", "conv2d",
+                      ((2, 16, 16, 8), (3, 3, 8, 256)), "float32",
+                      dual=False),
+        SiteSpec.make("net.mm", "matmul", ((512, 512), (512, 512)),
+                      "bfloat16", dual=False),
+        SiteSpec.make("net.pool", "pool2d", ((2, 14, 14, 256),), "float32",
+                      window=(2, 2), mode="max"),
+    ]
+    plan = plan_network(specs, ResourceBudget())
+    overrides = plan_tile_overrides(plan)
+    # pool2d has no sweepable tiling; the others only when their MXU
+    # member won the race
+    assert "net.pool" not in overrides
+    for name, params in overrides.items():
+        site = plan.site(name)
+        assert site.ip.name.split(".")[-1] in ("ip2_mxu", "mm_mxu")
+        assert params  # a concrete tiling was chosen
+        if site.spec.family == "matmul":
+            assert set(params) <= {"bm", "bn", "bk"}
+        else:
+            assert set(params) == {"block_cout"}
+    if "net.mm" in overrides:
+        # tuned execution must match the untuned kernel numerically
+        from repro.kernels.matmul.ops import matmul
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(512, 512)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(512, 512)).astype(np.float32))
+        want = matmul(a, b, ip="mm_mxu")
+        got = matmul(a, b, ip="mm_mxu", **overrides["net.mm"])
+        # a different bk reorders the f32 accumulation; equality is
+        # up to summation roundoff
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_plan_tile_overrides_skips_lowered_sites():
+    spec = SiteSpec.make("low.mm", "matmul", ((512, 512), (512, 512)),
+                         "float32", ladder=(8,), dual=False)
+    # a vmem envelope only the int8 rung fits forces the lowering
+    plan = None
+    for kib in (96, 128, 192, 256, 384):
+        try:
+            cand = plan_network([spec],
+                                ResourceBudget(vmem_bytes=kib * 1024))
+        except ValueError:
+            continue
+        if cand.lowered_sites():
+            plan = cand
+            break
+    if plan is None:
+        pytest.skip("no vmem rung lowered the matmul on this cost model")
+    assert plan.site("low.mm").lowered
+    assert "low.mm" not in plan_tile_overrides(plan)
+
+
+def test_cnn_block_executes_with_tile_overrides(rng):
+    """tile_overrides thread through apply_cnn_block to the conv kernel
+    without changing the result."""
+    from repro.models.blocks import apply_cnn_block, init_cnn_block
+    block = init_cnn_block(jax.random.PRNGKey(0), cin=8, cout=16, k=3)
+    x = jnp.asarray(rng.normal(size=(2, 12, 12, 8)).astype(np.float32))
+    # a VPU-starved budget denies ip1_vpu the conv, so the tunable
+    # ip2_mxu member wins and block_cout applies
+    budget = ResourceBudget(vpu_ops_budget=200_000)
+    probe = {}
+    base = apply_cnn_block(block, x, activation="relu", plan=probe,
+                           budget=budget)
+    assert probe["cnn_block.conv"][0].name.endswith("ip2_mxu")
+    y = apply_cnn_block(block, x, activation="relu", budget=budget,
+                        tile_overrides={"cnn_block.conv":
+                                        {"block_cout": 128}})
+    np.testing.assert_allclose(np.asarray(y), np.asarray(base), rtol=1e-6)

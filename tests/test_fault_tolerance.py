@@ -1,0 +1,89 @@
+"""Fault-tolerance runtime: watchdog lifecycle, straggler detection,
+elastic re-mesh shapes."""
+import time
+
+from repro.runtime.fault_tolerance import (StragglerMonitor, Watchdog,
+                                           choose_mesh_shape)
+
+
+def test_watchdog_fires_on_missed_beats():
+    fired = []
+    wd = Watchdog(timeout_s=0.05, on_timeout=lambda: fired.append(1)).start()
+    deadline = time.monotonic() + 2.0
+    while not fired and time.monotonic() < deadline:
+        time.sleep(0.01)
+    wd.stop()
+    assert fired
+    assert wd.fired
+
+
+def test_watchdog_beats_keep_it_quiet():
+    fired = []
+    wd = Watchdog(timeout_s=0.2, on_timeout=lambda: fired.append(1)).start()
+    for _ in range(6):
+        wd.beat()
+        time.sleep(0.03)
+    wd.stop()
+    assert not fired
+
+
+def test_stopped_watchdog_never_fires_afterwards():
+    """Regression: stop() must join the monitor thread, and a stopped
+    watchdog must not invoke on_timeout later even though its last beat
+    is long past the timeout."""
+    fired = []
+    wd = Watchdog(timeout_s=0.05, on_timeout=lambda: fired.append(1)).start()
+    wd.beat()
+    wd.stop()                      # before any timeout elapsed
+    assert not wd._thread.is_alive()   # stop() joined the monitor
+    time.sleep(0.2)                # well past timeout_s
+    assert not fired
+    assert not wd.fired
+
+
+def test_watchdog_stop_from_on_timeout_callback():
+    """Regression: the fire-once pattern — on_timeout calling stop() —
+    must not self-join the monitor thread."""
+    fired = []
+    holder = {}
+
+    def fire_once():
+        fired.append(1)
+        holder["wd"].stop()
+
+    holder["wd"] = Watchdog(timeout_s=0.05, on_timeout=fire_once).start()
+    deadline = time.monotonic() + 2.0
+    while not fired and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert fired == [1]
+    holder["wd"]._thread.join(timeout=1.0)     # loop exits cleanly
+    assert not holder["wd"]._thread.is_alive()
+    time.sleep(0.15)
+    assert fired == [1]                        # and never fires again
+
+
+def test_watchdog_stop_is_idempotent_and_safe_before_start():
+    wd = Watchdog(timeout_s=0.05, on_timeout=lambda: None)
+    wd.stop()                      # never started: no crash
+    wd2 = Watchdog(timeout_s=0.05, on_timeout=lambda: None).start()
+    wd2.stop()
+    wd2.stop()                     # double stop: no crash
+
+
+def test_straggler_monitor_flags_outliers():
+    events = []
+    mon = StragglerMonitor(threshold=2.0, warmup=2,
+                           on_straggler=events.append)
+    for step in range(5):
+        mon.record(step, 1.0)
+    ev = mon.record(5, 5.0)
+    assert ev is not None and ev.ratio > 2.0
+    assert events == [ev]
+    # the outlier must not poison the EWMA
+    assert mon.ewma < 1.5
+
+
+def test_choose_mesh_shape_prefers_model_divisors():
+    assert choose_mesh_shape(16, prefer_model=16) == (1, 16)
+    assert choose_mesh_shape(12, prefer_model=16) == (3, 4)
+    assert choose_mesh_shape(3, prefer_model=16) == (3, 1)
