@@ -35,19 +35,29 @@ import numpy as np
 
 ROWS = []
 
+# Wall-clock repetitions per measurement (the --repeat flag); every
+# timed table reports the MEDIAN of this many post-warmup runs, so a
+# single scheduler hiccup cannot skew a row.
+REPEAT = 3
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def _timeit(fn, *args, warmup=1, iters=3) -> float:
+def _timeit(fn, *args, warmup=1, iters=None) -> float:
+    """us/call: ``warmup`` discarded calls, then the median of
+    ``iters`` (default: the --repeat setting) timed calls."""
+    iters = REPEAT if iters is None else iters
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +269,85 @@ def table_precision():
 
 
 # ---------------------------------------------------------------------------
+# Table F — fused CNN blocks vs the unfused three-launch chain: the same
+# ladder-equipped float32 CNN is planned twice per budget (plan_network
+# with and without fuse=True) and BOTH plans are executed end-to-end, so
+# each row reports planned est-cycles (where the counted DMA-byte saving
+# lands), launch count (3 -> 1 per fused block), measured wall-clock
+# (interpret-mode median of --repeat runs), and the fused sites'
+# measured error against the composite f32 oracle.
+# ---------------------------------------------------------------------------
+def table_fusion():
+    from repro.core.plan import clear_plan_cache, plan_network
+    from repro.core.resources import ResourceBudget
+    from repro.quant.report import max_rel_error
+    print("# Table F — fusion: fused conv->pool->act blocks vs the "
+          "unfused three-launch chain per budget; cycles planned, "
+          "launches counted, us measured (interpret mode, median of "
+          f"{REPEAT}), err = max per-site rel error of the executed "
+          "fused plan vs the f32 oracles; x=infeasible")
+    budgets = {
+        "ample": ResourceBudget(),
+        "no_mxu": ResourceBudget(mxu_available=False),
+        "vmem_600KiB": ResourceBudget(vmem_bytes=600 * 1024),
+        "vmem_420KiB": ResourceBudget(vmem_bytes=420 * 1024),
+        # tight enough that a fused site descends to the int8 rung (the
+        # in-register-rescale path) and must stay within the error bound
+        "vmem_240KiB": ResourceBudget(vmem_bytes=240 * 1024),
+        "vpu_starved": ResourceBudget(vpu_ops_budget=2_000_000),
+    }
+    rng = np.random.default_rng(0)
+    weights = [jnp.asarray(rng.normal(0, (3 * 3 * cin) ** -0.5,
+                                      (3, 3, cin, cout)).astype(np.float32))
+               for cin, cout in TABLE3_LAYERS]
+    x = jnp.asarray(rng.normal(size=(2, 32, 32, 8)).astype(np.float32))
+    specs = precision_network_specs(PRECISION_LADDER)
+    for bname, budget in budgets.items():
+        clear_plan_cache()
+        plans = {}
+        for arm, fuse in (("unfused", False), ("fused", True)):
+            try:
+                plans[arm] = plan_network(specs, budget, fuse=fuse)
+            except ValueError:
+                plans[arm] = None
+        unf, fus = plans["unfused"], plans["fused"]
+        if fus is None:
+            emit(f"table_fusion.budget_{bname}", 0.0,
+                 ("unfused=x;" if unf is None
+                  else f"unfused={unf.total_cycles:.3e};") + "fused=x")
+            continue
+        us_fused = _timeit(lambda: _run_precision_network(
+            weights, x, fus, PRECISION_LADDER)[0])
+        _, report = _run_precision_network(weights, x, fus,
+                                           PRECISION_LADDER)
+        us_unfused = (None if unf is None else _timeit(
+            lambda: _run_precision_network(weights, x, unf,
+                                           PRECISION_LADDER)[0]))
+        fused_sites = [s for s in fus.sites
+                       if s.spec.family == "cnn_fused"]
+        err = max_rel_error(report, lowered_only=False)
+        wins = unf is None or fus.total_cycles < unf.total_cycles
+        never_worse = unf is None or fus.total_cycles <= unf.total_cycles
+        bits = "|".join(f"{s.spec.name}:{s.precision_bits}"
+                        for s in fused_sites) or "none"
+        derived = (("unfused=x" if unf is None
+                    else f"unfused={unf.total_cycles:.3e}")
+                   + f";fused={fus.total_cycles:.3e}"
+                   + (";launches_unfused=x" if unf is None
+                      else f";launches_unfused={unf.total_launches}")
+                   + f";launches_fused={fus.total_launches}"
+                   + f";fused_sites={len(fused_sites)};bits={bits}"
+                   + (";us_unfused=x" if us_unfused is None
+                      else f";us_unfused={us_unfused:.1f}")
+                   + f";us_fused={us_fused:.1f}"
+                   + f";max_rel_err={err:.3e}"
+                   + f";err_ok={int(err <= 5e-2)}"
+                   + f";fused_wins={int(wins)}"
+                   + f";never_worse={int(never_worse)}")
+        emit(f"table_fusion.budget_{bname}", us_fused, derived)
+
+
+# ---------------------------------------------------------------------------
 # Table S — the serving runtime: one constrained device, two tenants,
 # skewed load.  The same request trace is replayed against a static even
 # budget split and the demand arbiter; the arbiter must buy the heavy
@@ -443,6 +532,7 @@ BENCHES = {
     "table2": table2_resource_utilization,
     "table3": table3_comparison,
     "table_precision": table_precision,
+    "table_fusion": table_fusion,
     "table_serving": table_serving,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
@@ -461,20 +551,36 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads for CI (benches that "
                          "support it, e.g. table_serving's single mix)")
+    ap.add_argument("--repeat", type=int, default=3, metavar="N",
+                    help="wall-clock runs per measurement after one "
+                         "warmup; timed rows report the median (default 3)")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write machine-readable rows "
                          "[{name, us_per_call, derived}] to PATH")
     args = ap.parse_args(argv)
+    global REPEAT
+    REPEAT = max(1, args.repeat)
     selected = (args.only.split(",") if args.only else list(BENCHES))
     unknown = [s for s in selected if s not in BENCHES]
     if unknown:
         raise SystemExit(f"unknown benches {unknown}; have {list(BENCHES)}")
+    repo_root = Path(__file__).resolve().parent.parent
     print("name,us_per_call,derived")
     for name in selected:
         fn = BENCHES[name]
         kwargs = ({"smoke": True} if args.smoke
                   and "smoke" in inspect.signature(fn).parameters else {})
+        start = len(ROWS)
         fn(**kwargs)
+        # Per-table perf trajectory: full runs persist their rows next
+        # to the repo (BENCH_<table>.json) so successive PRs can diff;
+        # --smoke runs are reduced workloads and must not overwrite the
+        # trajectory.
+        if not args.smoke:
+            table_rows = [{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in ROWS[start:]]
+            (repo_root / f"BENCH_{name}.json").write_text(
+                json.dumps(table_rows, indent=2))
     print(f"# total rows: {len(ROWS)}")
     if args.json:
         rows = [{"name": n, "us_per_call": us, "derived": d}

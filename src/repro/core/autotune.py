@@ -128,12 +128,31 @@ def autotune_conv(n: int, h: int, w: int, cin: int, kh: int, kw: int,
     return res[0]
 
 
+def autotune_fused(n: int, h: int, w: int, cin: int, kh: int, kw: int,
+                   cout: int, ph: int, pw: int, sh: int, sw: int, *,
+                   ip: str = "fused_mxu", itemsize: int = 1,
+                   mode: str = "max", kind: str = "relu",
+                   budget: Optional[ResourceBudget] = None) -> TuneResult:
+    """Cout-block sweep for the fused conv->pool->act members."""
+    from repro.kernels.fused import cnn_block as fused_mod
+    fp_fn = (fused_mod.footprint_mxu if ip.endswith("mxu")
+             else fused_mod.footprint_vpu)
+    budget = budget or ResourceBudget()
+    grid = {"block_cout": _aligned(LANE, max(cout, LANE), LANE)}
+    res = sweep(fp_fn, grid, budget, n, h, w, cin, kh, kw, cout,
+                ph, pw, sh, sw, itemsize=itemsize, mode=mode, kind=kind)
+    if not res:
+        raise ValueError("no feasible fused-block tiling")
+    return res[0]
+
+
 # ---------------------------------------------------------------------------
 # Plan bridge — tile choices for the sites of a NetworkPlan.
 # ---------------------------------------------------------------------------
 # Families/members with sweepable tiling parameters; everything else in a
 # plan runs its member's built-in defaults.
-_TUNABLE = {("conv2d", "ip2_mxu"), ("matmul", "mm_mxu")}
+_TUNABLE = {("conv2d", "ip2_mxu"), ("matmul", "mm_mxu"),
+            ("cnn_fused", "fused_vpu"), ("cnn_fused", "fused_mxu")}
 
 
 def plan_tile_overrides(plan) -> Dict[str, Dict[str, int]]:
@@ -165,6 +184,19 @@ def plan_tile_overrides(plan) -> Dict[str, Dict[str, int]]:
                 kh, kw, cin, cout = w_shape
                 res = autotune_conv(n, h, w, cin, kh, kw, cout, ip=short,
                                     itemsize=itemsize, budget=sub)
+            elif site.spec.family == "cnn_fused":
+                from repro.kernels.pool2d.ref import check_pool_geometry
+                x_shape, w_shape = site.spec.shapes
+                n, h, w = x_shape[0], x_shape[1], x_shape[2]
+                kh, kw, cin, cout = w_shape
+                (ph, pw), (sh, sw) = check_pool_geometry(
+                    (n, h - kh + 1, w - kw + 1, cout),
+                    site.spec.knob("window", (2, 2)),
+                    site.spec.knob("stride"))
+                res = autotune_fused(
+                    n, h, w, cin, kh, kw, cout, ph, pw, sh, sw, ip=short,
+                    itemsize=itemsize, mode=site.spec.knob("mode", "max"),
+                    kind=site.spec.knob("kind", "relu"), budget=sub)
             else:
                 a_shape, b_shape = site.spec.shapes
                 res = autotune_matmul(a_shape[-2], a_shape[-1], b_shape[-1],

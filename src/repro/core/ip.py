@@ -170,6 +170,15 @@ class IPFamily:
     sites lowered below native width.  Attention and the SSM scan have
     no integer kernels, so pricing them at int8 would promise a plan the
     runtime cannot execute.
+
+    **Fusion contract** (docs/adaptive_ips.md, "Fusion contract"): a
+    family whose members absorb a *chain* of op families into one launch
+    declares the chain in ``fuses`` (program order, e.g. ``("conv2d",
+    "pool2d", "activation")``) and registers a ``fuse_sites`` adapter
+    mapping that many adjacent SiteSpecs to the single fused SiteSpec —
+    or ``None`` when the run is not fusable (wrong knobs, shapes that
+    don't chain).  ``plan_network(..., fuse=True)`` scans every planned
+    graph for such runs generically; it never hard-codes a family.
     """
 
     name: str
@@ -177,6 +186,9 @@ class IPFamily:
     reference: Optional[Callable[..., Any]] = None
     site_adapter: Optional[Callable[[SiteSpec], SiteRequest]] = None
     quantizable: bool = True
+    fuses: Tuple[str, ...] = ()
+    fuse_sites: Optional[Callable[[Tuple[SiteSpec, ...]],
+                                  Optional[SiteSpec]]] = None
 
     def plan_site(self, spec: SiteSpec) -> SiteRequest:
         if spec.family != self.name:

@@ -93,6 +93,40 @@ ACTIVATION.register(KernelIP(
                 "1-byte streaming per element; saturating kinds only."))
 
 # --------------------------------------------------------------------------
+# cnn_fused family — conv -> pool -> activation as ONE launch (the paper's
+# future-work integration of pooling/activation with the conv IPs).  One
+# member per conv IP style; the planner substitutes a fused site for a
+# fusable conv/pool/act triple when the combined footprint fits and wins
+# (core/plan.py, fuse=True).
+# --------------------------------------------------------------------------
+from repro.kernels.fused import cnn_block as fused_mod  # noqa: E402
+
+
+def _fused_ref(x, w, *, window=(2, 2), stride=None, mode="max",
+               kind="relu"):
+    """Composite oracle: the three family references chained."""
+    return activation_ref(
+        pool2d_ref(conv2d_ref(x, w), window=window, stride=stride,
+                   mode=mode), kind=kind)
+
+
+CNN_FUSED = IPFamily("cnn_fused", reference=_fused_ref,
+                     fuses=("conv2d", "pool2d", "activation"))
+CNN_FUSED.register(KernelIP(
+    name="cnn_fused.fused_vpu", family="cnn_fused",
+    impl=fused_mod.fused_cnn_vpu, footprint_fn=fused_mod.footprint_vpu,
+    uses_mxu=False, tags=("fused", "analogue:Conv1"),
+    description="Whole CNN block in one launch: Conv1-style VPU MAC, pool "
+                "reduce + activation applied to the VMEM-resident tile; "
+                "writes only the pooled, activated tensor."))
+CNN_FUSED.register(KernelIP(
+    name="cnn_fused.fused_mxu", family="cnn_fused",
+    impl=fused_mod.fused_cnn_mxu, footprint_fn=fused_mod.footprint_mxu,
+    uses_mxu=True, tags=("fused", "analogue:Conv2"),
+    description="Whole CNN block in one launch: im2col + one MXU pass, "
+                "pool + activation in register; single HBM write."))
+
+# --------------------------------------------------------------------------
 # matmul family — the LM-hot-path generalization.
 # --------------------------------------------------------------------------
 MATMUL = IPFamily("matmul", reference=matmul_ref)
@@ -162,8 +196,8 @@ SSM_SCAN.register(KernelIP(
     description="Selective scan with VMEM-resident state: HBM traffic "
                 "O(T·(Di+Ds)) vs the scan twin's O(T·Di·Ds)."))
 
-FAMILIES = {f.name: f for f in (CONV2D, POOL2D, ACTIVATION, MATMUL,
-                                ATTENTION, SSM_SCAN)}
+FAMILIES = {f.name: f for f in (CONV2D, POOL2D, ACTIVATION, CNN_FUSED,
+                                MATMUL, ATTENTION, SSM_SCAN)}
 
 # --------------------------------------------------------------------------
 # Site adapters — what makes each family *plannable*.  An adapter maps a
@@ -260,9 +294,61 @@ def _attention_adapter(spec: SiteSpec) -> SiteRequest:
         op_bits=_bits(spec.dtype))
 
 
+def _cnn_fused_adapter(spec: SiteSpec) -> SiteRequest:
+    from repro.kernels.pool2d.ref import check_pool_geometry
+    x_shape, w_shape = spec.shapes
+    n, h, w_, cin = x_shape
+    kh, kw, _, cout = w_shape
+    conv_out = (n, h - kh + 1, w_ - kw + 1, cout)
+    (ph, pw), (sh, sw) = check_pool_geometry(
+        conv_out, spec.knob("window", (2, 2)), spec.knob("stride"))
+    return SiteRequest(
+        candidates=(CNN_FUSED["fused_vpu"], CNN_FUSED["fused_mxu"]),
+        fp_args=(n, h, w_, cin, kh, kw, cout, ph, pw, sh, sw),
+        fp_kwargs=(("itemsize", jnp.dtype(spec.dtype).itemsize),
+                   ("mode", spec.knob("mode", "max")),
+                   ("kind", spec.knob("kind", "relu"))),
+        op_bits=_bits(spec.dtype))
+
+
+def _cnn_fuse_sites(run) -> "SiteSpec | None":
+    """Map an adjacent (conv, pool, act) SiteSpec triple to the single
+    fused-block SiteSpec, or None when the run is not fusable: a
+    dual-stream conv, shapes that do not chain conv->pool->act, or a
+    pool window the conv output cannot host."""
+    conv, pool, act = run
+    if conv.knob("dual", False):
+        return None
+    x_shape, w_shape = conv.shapes
+    n, h, w_, cin = x_shape
+    kh, kw, _, cout = w_shape
+    conv_out = (n, h - kh + 1, w_ - kw + 1, cout)
+    if tuple(pool.shapes[0]) != conv_out:
+        return None
+    try:
+        from repro.kernels.pool2d.ref import (check_pool_geometry,
+                                              pool2d_out_shape)
+        window, stride = check_pool_geometry(
+            conv_out, pool.knob("window", (2, 2)), pool.knob("stride"))
+        if tuple(act.shapes[0]) != pool2d_out_shape(conv_out, window,
+                                                    stride):
+            return None
+    except ValueError:
+        return None
+    base = conv.name[:-len(".conv")] if conv.name.endswith(".conv") \
+        else conv.name
+    ladder = set(conv.ladder) & set(pool.ladder) & set(act.ladder)
+    return SiteSpec.make(
+        f"{base}.fused", "cnn_fused", (x_shape, w_shape), conv.dtype,
+        ladder=tuple(ladder), window=window, stride=stride,
+        mode=pool.knob("mode", "max"), kind=act.knob("kind", "relu"))
+
+
 CONV2D.site_adapter = _conv2d_adapter
 POOL2D.site_adapter = _pool2d_adapter
 ACTIVATION.site_adapter = _activation_adapter
+CNN_FUSED.site_adapter = _cnn_fused_adapter
+CNN_FUSED.fuse_sites = _cnn_fuse_sites
 MATMUL.site_adapter = _matmul_adapter
 ATTENTION.site_adapter = _attention_adapter
 

@@ -29,12 +29,21 @@ the single selection engine behind every family:
   experiment artifacts.  The cache is LRU with observable statistics
   (``plan_cache_stats()``: hits, misses, evictions, occupancy) — the
   serving runtime surfaces these per tenant.
+* **Fusion groups** (``fuse=True``): adjacent site runs a registered
+  fused family absorbs (``IPFamily.fuses`` + ``fuse_sites``, e.g.
+  conv->pool->act -> one ``cnn_fused`` site) are substituted when the
+  fused member's combined footprint is feasible at the full budget and
+  prices at or below the unfused chain, with per-group fallback to the
+  three-site plan when the fused footprint breaks the partition
+  (docs/adaptive_ips.md, "Fusion contract").
 * ``replan(specs, new_budget)`` — the live re-planning fast path: when
   the serving arbiter shifts a tenant's budget slice, the graph is
   unchanged and only the envelope moved, so the expensive full-budget
   baseline (one ``_select_site`` per site) is skipped by reusing the
   graph's memoized *cost shares*; only slice assignment (and, on
   failure, the needs-floor repair) re-runs under the new budget.
+  ``strict=True`` verifies the heuristic against a cold plan
+  (``replan_strict_mismatch`` counts divergences caught).
 * ``network_min_fraction(specs, budget)`` — the smallest fraction of a
   budget under which the graph still plans (ladder rungs included);
   the arbiter floors each tenant's share here.
@@ -63,9 +72,22 @@ class PlannerStats:
     plan_misses: int = 0
     plan_evictions: int = 0     # LRU entries displaced at capacity
     replan_fast: int = 0        # replan() misses served via cached shares
+    replan_cold: int = 0        # replan() misses that fell to a cold plan
+    replan_strict_mismatch: int = 0  # strict=True caught a divergent
+                                     # fast-path assignment
+    fused_sites: int = 0        # fusion groups substituted into plans
+    fused_fallbacks: int = 0    # groups unfused because the fused
+                                # footprint broke the partition
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class PartitionError(ValueError):
+    """A graph's per-site minima jointly exceed the envelope — the
+    partition (not any single site) is what failed.  Subclasses
+    ValueError so callers keep catching the family-standard error; the
+    fusion fallback keys on the type to know unfusing can help."""
 
 
 STATS = PlannerStats()
@@ -74,6 +96,10 @@ STATS = PlannerStats()
 _PLAN_CACHE: Dict[tuple, "NetworkPlan"] = {}
 # graph-key -> normalized full-budget cost shares (the replan fast path).
 _SHARE_CACHE: Dict[tuple, Tuple[float, ...]] = {}
+# original graph -> the fused/unfused site list the last cold plan
+# settled on (the replan fast path re-uses it; a moved budget that
+# breaks it falls back to a cold plan, which re-decides).
+_FUSE_CACHE: Dict[tuple, Tuple[SiteSpec, ...]] = {}
 
 
 def planner_stats() -> PlannerStats:
@@ -83,6 +109,7 @@ def planner_stats() -> PlannerStats:
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _SHARE_CACHE.clear()
+    _FUSE_CACHE.clear()
 
 
 def plan_cache_stats() -> dict:
@@ -285,6 +312,12 @@ class NetworkPlan:
         return sum(s.footprint.est_cycles / max(s.footprint.outputs_per_pass, 1)
                    for s in self.sites)
 
+    @property
+    def total_launches(self) -> int:
+        """Kernel launches one execution of this plan issues — the
+        number fusion collapses (3 -> 1 per fused CNN block)."""
+        return sum(s.footprint.launches for s in self.sites)
+
     def precision_of(self, name: str) -> int:
         """The operand width the ladder settled on for one site."""
         return self.site(name).precision_bits
@@ -382,7 +415,8 @@ def _site_need(spec: SiteSpec, budget: ResourceBudget) -> float:
 
 
 def plan_network(specs: Iterable[SiteSpec],
-                 budget: Optional[ResourceBudget] = None) -> "NetworkPlan":
+                 budget: Optional[ResourceBudget] = None, *,
+                 fuse: bool = False) -> "NetworkPlan":
     """Map a network of sites onto one partitioned budget (memoized).
 
     Partitioning: fractions proportional to each site's cheapest
@@ -392,51 +426,96 @@ def plan_network(specs: Iterable[SiteSpec],
     family-standard ``ValueError`` when a site is infeasible even under
     the full budget, or when the sites' minimal needs exceed the
     envelope.
+
+    ``fuse=True`` turns on **fusion-aware planning**: adjacent runs a
+    registered fused family absorbs (e.g. conv->pool->act, declared via
+    ``IPFamily.fuses``) are substituted by the single fused site when
+    the fused member is feasible at the full budget and its combined
+    footprint prices at or below the unfused chain's; groups whose
+    fused footprint then breaks the partition are unfused again one at
+    a time (largest minimal need first) until the plan closes — the
+    fused plan can only ever *gain* feasibility over the unfused one.
     """
     budget = budget or ResourceBudget()
-    key = (tuple(specs), budget)
+    key = (tuple(specs), budget, fuse)
     cached = _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
     STATS.plan_misses += 1
-    plan = _plan_uncached(key[0], budget)
+    plan = _plan_uncached(key[0], budget, fuse=fuse)
     _cache_put(key, plan)
     return plan
 
 
 def replan(specs: Iterable[SiteSpec],
-           budget: Optional[ResourceBudget] = None) -> "NetworkPlan":
+           budget: Optional[ResourceBudget] = None, *,
+           fuse: bool = False, strict: bool = False) -> "NetworkPlan":
     """Re-plan a known graph under a moved budget — the serving fast path.
 
     Exact ``(graph, budget)`` repeats are cache hits like
     ``plan_network``.  On a miss for a graph planned before, the
     full-budget baseline (one ladder-descending selection per site —
     the bulk of a cold plan's footprint evaluations) is skipped by
-    reusing the graph's memoized cost shares; only slice assignment
-    runs under the new budget, with the needs-floor repair on failure.
-    A graph never planned before falls through to ``plan_network``;
-    so do fast-path failures, to surface the canonical errors (or
-    rescue a plan the stale shares missed).
+    reusing the graph's memoized cost shares (and, with ``fuse=True``,
+    its memoized fused/unfused site list); only slice assignment runs
+    under the new budget, with the needs-floor repair on failure.  A
+    graph never planned before falls through to ``plan_network``; so do
+    fast-path failures, to surface the canonical errors (or rescue a
+    plan the stale shares missed).  ``planner_stats()`` counts the
+    split: ``replan_fast`` misses served off cached shares vs
+    ``replan_cold`` misses that fell to a cold plan.
+
+    **The fast path is a heuristic**: stale shares can settle on a
+    different (still feasible, possibly less lowered) assignment than a
+    cold plan of the same ``(graph, budget)`` would.  ``strict=True`` is
+    the escape hatch: the fast-path result is verified against the cold
+    plan and silently replaced by it on divergence
+    (``replan_strict_mismatch`` counts the catches) — tests and audits
+    run strict; the serving loop accepts the heuristic.
     """
     budget = budget or ResourceBudget()
     specs = tuple(specs)
-    key = (specs, budget)
-    cached = _cache_get(key)
+    key = (specs, budget, fuse)
+    cached = None if strict else _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
-    shares = _SHARE_CACHE.get(specs)
+    eff = _FUSE_CACHE.get(specs) if fuse else specs
+    shares = _SHARE_CACHE.get(eff) if eff is not None else None
     if shares is None:
-        return plan_network(specs, budget)
+        STATS.replan_cold += 1
+        if not strict:
+            return plan_network(specs, budget, fuse=fuse)
+        # strict must not trust plan_network's cache: a prior NON-strict
+        # replan may have stored its heuristic plan under this very key.
+        STATS.plan_misses += 1
+        plan = _plan_uncached(specs, budget, fuse=fuse)
+        _cache_put(key, plan)
+        return plan
     STATS.plan_misses += 1
-    STATS.replan_fast += 1
+    fell_cold = False
     try:
-        plan = _assign_with_repair(specs, budget, shares)
+        plan = _assign_with_repair(eff, budget, shares)
+        STATS.replan_fast += 1
     except ValueError:
-        plan = _plan_uncached(specs, budget)
+        STATS.replan_cold += 1
+        fell_cold = True
+        plan = _plan_uncached(specs, budget, fuse=fuse)
+    if strict and not fell_cold:   # a fallen-cold plan IS the cold plan
+        cold = _plan_uncached(specs, budget, fuse=fuse)
+        if _assignment(plan) != _assignment(cold):
+            STATS.replan_strict_mismatch += 1
+            plan = cold
     _cache_put(key, plan)
     return plan
+
+
+def _assignment(plan: "NetworkPlan") -> tuple:
+    """What 'same decision' means for strict replan verification: the
+    member and operand width chosen per site (fractions may wiggle)."""
+    return tuple((s.spec.name, s.ip.name, s.precision_bits)
+                 for s in plan.sites)
 
 
 def network_min_fraction(specs: Iterable[SiteSpec],
@@ -490,7 +569,7 @@ def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
         needs = [_site_need(s, budget) for s in specs]
         total_need = sum(needs)
         if total_need > 1.0 + 1e-9:
-            raise ValueError(
+            raise PartitionError(
                 f"no feasible network plan under budget {budget}: sites "
                 f"{[s.name for s in specs]} jointly need {total_need:.3f}x "
                 f"the envelope "
@@ -506,8 +585,68 @@ def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
     return NetworkPlan(budget=budget, sites=tuple(planned))
 
 
-def _plan_uncached(specs: Tuple[SiteSpec, ...],
-                   budget: ResourceBudget) -> NetworkPlan:
+# ---------------------------------------------------------------------------
+# Fusion groups — substitute a registered fused family's single site for
+# the adjacent run of op sites it absorbs (docs/adaptive_ips.md,
+# "Fusion contract").
+# ---------------------------------------------------------------------------
+def _fusion_groups(specs: Tuple[SiteSpec, ...]):
+    """Adjacent runs some fused family absorbs: [(start, length,
+    fused_spec)], non-overlapping, left-to-right greedy."""
+    from repro.core.library import FAMILIES
+    fusers = [f for f in FAMILIES.values() if f.fuses and f.fuse_sites]
+    groups = []
+    i = 0
+    while i < len(specs):
+        step = 1
+        for fam in fusers:
+            ln = len(fam.fuses)
+            run = specs[i:i + ln]
+            if (len(run) == ln
+                    and tuple(s.family for s in run) == fam.fuses):
+                fspec = fam.fuse_sites(tuple(run))
+                if fspec is not None:
+                    groups.append((i, ln, fspec))
+                    step = ln
+                    break
+        i += step
+    return groups
+
+
+def _substitute(specs: Tuple[SiteSpec, ...], groups) -> Tuple[SiteSpec, ...]:
+    out = list(specs)
+    for start, length, fspec in sorted(groups, reverse=True):
+        out[start:start + length] = [fspec]
+    return tuple(out)
+
+
+def _fused_specs(specs: Tuple[SiteSpec, ...], select):
+    """The fusion decision at full budget: substitute a group's fused
+    site when the fused member is feasible AND its combined footprint
+    prices at or below the unfused chain's cheapest members (or the
+    chain is outright infeasible — fusion can rescue it).  Returns
+    ``(effective_specs, chosen_groups)``."""
+    chosen = []
+    for start, length, fspec in _fusion_groups(specs):
+        try:
+            _, ffp, _ = select(fspec)
+        except ValueError:
+            continue
+        fcost = ffp.est_cycles / max(ffp.outputs_per_pass, 1)
+        try:
+            ucost = 0.0
+            for s in specs[start:start + length]:
+                _, ufp, _ = select(s)
+                ucost += ufp.est_cycles / max(ufp.outputs_per_pass, 1)
+        except ValueError:
+            ucost = None
+        if ucost is None or fcost <= ucost:
+            chosen.append((start, length, fspec))
+    return _substitute(specs, chosen), chosen
+
+
+def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
+                   fuse: bool = False) -> NetworkPlan:
     if not specs:
         return NetworkPlan(budget=budget, sites=())
     names = [s.name for s in specs]
@@ -515,10 +654,53 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...],
         dupes = sorted({n for n in names if names.count(n) > 1})
         raise ValueError(f"duplicate site names in network: {dupes}")
 
+    # One full-budget selection per distinct site for this whole call:
+    # the fusion decision and the baseline price the same specs, and the
+    # fallback retries re-price surviving sites.
+    memo: Dict[SiteSpec, tuple] = {}
+
+    def select_full(spec: SiteSpec):
+        if spec not in memo:
+            memo[spec] = _select_site(spec, budget)
+        return memo[spec]
+
+    eff, chosen = (_fused_specs(specs, select_full) if fuse
+                   else (specs, []))
+    while True:
+        try:
+            plan = _plan_effective(eff, budget, select_full)
+            break
+        except ValueError as e:
+            # Only a broken partition is fusion's fault (every chosen
+            # fused member was verified feasible at the full budget); a
+            # per-site "no feasible IP" cannot be fixed by unfusing.
+            if not chosen or not isinstance(e, PartitionError):
+                raise
+            # The fused VMEM need broke the partition: unfuse the group
+            # with the largest minimal slice and retry — the fully
+            # unfused list is the guaranteed-no-worse floor.
+            STATS.fused_fallbacks += 1
+            needs = [(_site_need(f, budget), idx)
+                     for idx, (_, _, f) in enumerate(chosen)]
+            _, drop = max(needs)
+            chosen = chosen[:drop] + chosen[drop + 1:]
+            eff = _substitute(specs, chosen)
+    if fuse:
+        STATS.fused_sites += len(chosen)
+        _FUSE_CACHE[specs] = eff
+        if len(_FUSE_CACHE) > _SHARE_CACHE_MAX:
+            _FUSE_CACHE.pop(next(iter(_FUSE_CACHE)))
+    return plan
+
+
+def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
+                    select=None) -> NetworkPlan:
     # 1) Full-budget baseline: cost shares (raises "no feasible IP" for a
     #    site that cannot run even with everything — after descending its
     #    precision ladder, when it has one).
-    base = [_select_site(s, budget) for s in specs]
+    if select is None:
+        select = lambda s: _select_site(s, budget)  # noqa: E731
+    base = [select(s) for s in specs]
     costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp, _ in base]
     total_cost = sum(costs) or 1.0
     shares = tuple(c / total_cost for c in costs)

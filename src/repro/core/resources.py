@@ -89,6 +89,9 @@ class Footprint:
     est_cycles: float
     outputs_per_pass: int = 1       # Conv3/Conv4 produce 2 convolutions/pass
     max_operand_bits: int = 32      # Conv3 is limited to 8
+    launches: int = 1               # pallas_call launches per invocation;
+                                    # a fused conv->pool->act member is 1
+                                    # where the unfused chain costs 3
 
     def fits(self, budget: ResourceBudget) -> bool:
         if self.vmem_bytes > budget.vmem_bytes:
@@ -106,6 +109,21 @@ class Footprint:
         if budget.precision_bits > self.max_operand_bits:
             return False
         return True
+
+
+def cost_cycles(compute_cycles: float, hbm_bytes: int) -> float:
+    """The shared est-cycles rule every footprint prices with: a kernel
+    launch pays its compute AND its DMA traffic.
+
+    The earlier model took ``max(compute, dma)`` (perfect overlap), which
+    made HBM round-trips free whenever compute dominated — exactly the
+    traffic layer fusion removes.  Accounting DMA bytes additively is the
+    conservative serial model (the paper's DDR-traffic column is a cost
+    column, not an overlap hint), and it is what lets a fused
+    conv->pool->act member's saved intermediate reads+writes show up as
+    a counted est-cycles drop (docs/adaptive_ips.md, "Fusion contract").
+    """
+    return compute_cycles + hbm_cycles(hbm_bytes)
 
 
 def mxu_pass_cycles(m: int, k: int, n: int) -> float:

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  vpu_op_cycles)
 from repro.kernels.activation.ref import _FNS, KINDS
 
 # Approximate VPU scalar-op cost per element (mul/add/cmp units).
@@ -62,5 +63,5 @@ def footprint(n_elems, *, itemsize=4, kind="relu",
     vpu = n_elems * OP_COST.get(kind, 8)
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
                      vpu_ops=vpu,
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

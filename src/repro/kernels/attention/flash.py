@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.resources import Footprint, hbm_cycles, mxu_pass_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles)
 
 _NEG_INF = -1e30
 
@@ -129,5 +130,5 @@ def footprint(b, hq, hkv, sq, skv, d, *, itemsize=2, bq=512, bk=512,
     passes = int(b * hq * pl.cdiv(sq, bq_) * pl.cdiv(skv, bk_) * frac) + 1
     return Footprint(vmem_bytes=int(vmem), hbm_bytes=int(hbm),
                      mxu_passes=passes, vpu_ops=int(b * hq * sq * skv * frac * 4),
-                     est_cycles=max(cyc, hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(cyc, hbm),
                      outputs_per_pass=1, max_operand_bits=32)

@@ -1,0 +1,58 @@
+"""Shared conv inner-loop bodies — the single source of the per-tile
+convolution math.
+
+The standalone members (``ip1_vpu``, ``ip2_mxu``) and the fused
+conv->pool->act members (``kernels/fused/cnn_block.py``) compute the
+same accumulator tile; keeping the loop bodies here means a fused kernel
+cannot drift numerically from the standalone IP it absorbs — the fusion
+tests assert bitwise equality in float32, and that only holds because
+both paths run literally this code.
+
+Both helpers take the *already-loaded* VMEM views (one image plane, one
+weight tile) and return the (Ho, Wo, bc) accumulator; callers own the
+Ref loads/stores and the grid.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def accumulate_vpu(x, w_ref, *, ho: int, wo: int, kh: int, kw: int,
+                   acc_dtype):
+    """Conv1-style logic-only accumulation: unrolled shifted
+    multiply-accumulate over the taps — pure VPU, no dot op.
+
+    ``x``: (H, W, Cin) plane already cast to ``acc_dtype``;
+    ``w_ref``: (kh, kw, Cin, bc) weight Ref.  Returns (Ho, Wo, bc).
+    """
+    acc = jnp.zeros((ho, wo, w_ref.shape[-1]), dtype=acc_dtype)
+    for i in range(kh):
+        for j in range(kw):
+            window = x[i:i + ho, j:j + wo, :]           # (Ho, Wo, Cin)
+            tap = w_ref[i, j].astype(acc_dtype)         # (Cin, bc)
+            # Elementwise broadcast-multiply + reduce over Cin — the
+            # reduce is a chain of adds, not a dot: keep it explicit so
+            # Mosaic lowers it to VPU ops.
+            prod = window[..., :, None] * tap[None, None, :, :]
+            acc = acc + jnp.sum(prod, axis=2)
+    return acc
+
+
+def accumulate_mxu(x, w_ref, *, ho: int, wo: int, kh: int, kw: int,
+                   acc_dtype):
+    """Conv2-style accumulation: im2col built in VMEM from shifted
+    slices, the whole tap reduction collapsing into ONE MXU pass.
+
+    ``x``: (H, W, Cin) plane in the operand dtype; ``w_ref``:
+    (kh, kw, Cin, bc) weight Ref.  Returns (Ho, Wo, bc).
+    """
+    cin = x.shape[-1]
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[i:i + ho, j:j + wo, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(ho * wo, kh * kw * cin)
+    wmat = w_ref[...].reshape(kh * kw * cin, -1)        # (kh*kw*Cin, bc)
+    # THE single MXU pass:
+    acc = jnp.dot(patches, wmat, preferred_element_type=acc_dtype)
+    return acc.reshape(ho, wo, -1)

@@ -19,26 +19,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import Footprint, vpu_op_cycles, hbm_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  vpu_op_cycles)
+from repro.kernels.conv2d.inner import accumulate_vpu
 
 
 def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, acc_dtype):
     # x_ref: (1, H, W, Cin); w_ref: (kh, kw, Cin, bc); o_ref: (1, Ho, Wo, bc)
-    ho = o_ref.shape[1]
-    wo = o_ref.shape[2]
     x = x_ref[0].astype(acc_dtype)                      # (H, W, Cin)
-    acc = jnp.zeros(o_ref.shape[1:], dtype=acc_dtype)   # (Ho, Wo, bc)
-    # Unrolled shifted multiply-accumulate: pure VPU, no dot.
-    for i in range(kh):
-        for j in range(kw):
-            window = x[i:i + ho, j:j + wo, :]           # (Ho, Wo, Cin)
-            tap = w_ref[i, j].astype(acc_dtype)         # (Cin, bc)
-            # Elementwise broadcast-multiply + reduce over Cin — the
-            # reduce is a chain of adds, not a dot: keep it explicit so
-            # Mosaic lowers it to VPU ops.
-            prod = window[..., :, None] * tap[None, None, :, :]
-            acc = acc + jnp.sum(prod, axis=2)
-    o_ref[0] = acc
+    o_ref[0] = accumulate_vpu(x, w_ref, ho=o_ref.shape[1], wo=o_ref.shape[2],
+                              kh=kh, kw=kw, acc_dtype=acc_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_cout", "interpret"))
@@ -77,5 +67,5 @@ def footprint(n, h, w, cin, kh, kw, cout, *, itemsize=1,
     vpu = n * ho * wo * cout * kh * kw * cin * 2   # mul+add per tap
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
                      vpu_ops=vpu,
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

@@ -14,24 +14,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import (Footprint, hbm_cycles, mxu_pass_cycles)
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles)
+from repro.kernels.conv2d.inner import accumulate_mxu
 
 
 def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, acc_dtype):
-    ho = o_ref.shape[1]
-    wo = o_ref.shape[2]
-    cin = x_ref.shape[3]
-    x = x_ref[0]                                        # (H, W, Cin)
-    # im2col: stack the kh*kw shifted views -> (Ho*Wo, kh*kw*Cin)
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            cols.append(x[i:i + ho, j:j + wo, :])
-    patches = jnp.concatenate(cols, axis=-1).reshape(ho * wo, kh * kw * cin)
-    wmat = w_ref[...].reshape(kh * kw * cin, -1)        # (kh*kw*Cin, bc)
-    # THE single MXU pass:
-    acc = jnp.dot(patches, wmat, preferred_element_type=acc_dtype)
-    o_ref[0] = acc.reshape(ho, wo, -1)
+    # x_ref: (1, H, W, Cin); w_ref: (kh, kw, Cin, bc); o_ref: (1, Ho, Wo, bc)
+    o_ref[0] = accumulate_mxu(x_ref[0], w_ref, ho=o_ref.shape[1],
+                              wo=o_ref.shape[2], kh=kh, kw=kw,
+                              acc_dtype=acc_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_cout", "interpret"))
@@ -74,5 +66,5 @@ def footprint(n, h, w, cin, kh, kw, cout, *, itemsize=1,
     vpu = n * ho * wo * k                     # im2col data movement ops
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
                      vpu_ops=vpu,
-                     est_cycles=max(cyc, hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(cyc, hbm),
                      outputs_per_pass=1, max_operand_bits=32)

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  vpu_op_cycles)
 
 
 def _unpack(m):
@@ -98,5 +99,5 @@ def footprint(n, h, w, cin, kh, kw, cout, *, itemsize=1,
     vpu = taps * 6
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
                      vpu_ops=vpu,
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=2, max_operand_bits=8)

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.resources import Footprint, hbm_cycles, mxu_pass_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles)
 
 
 def _kernel(xa_ref, xb_ref, w_ref, oa_ref, ob_ref, *, kh: int, kw: int,
@@ -84,5 +85,5 @@ def footprint(n, h, w, cin, kh, kw, cout, *, itemsize=1,
     vpu = 2 * n * ho * wo * k
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
                      vpu_ops=vpu,
-                     est_cycles=max(cyc, hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(cyc, hbm),
                      outputs_per_pass=2, max_operand_bits=32)

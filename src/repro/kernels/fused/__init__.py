@@ -1,0 +1,1 @@
+"""Fused CNN-block IP family: conv -> pool -> activation in ONE launch."""

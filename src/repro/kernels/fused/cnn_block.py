@@ -1,0 +1,205 @@
+"""Fused conv->pool->activation CNN-block kernels — one resource-shaped
+unit per block, the paper's stated future work ("integrate pooling and
+activation with the convolution IPs").
+
+The unfused chain launches three ``pallas_call``s and round-trips the
+conv output (the largest tensor of the block) and the pool output
+through HBM between them.  Each fused member computes the conv
+accumulator tile, applies the pooling reduce and the activation to the
+still-resident VMEM tile, and writes ONLY the final (pooled, activated)
+tensor back — the intermediate reads+writes disappear from the DMA
+column, which the additive cost model (``core.resources.cost_cycles``)
+turns into a counted est-cycles drop.
+
+Two members, one per conv IP style, sharing the standalone kernels'
+inner-loop bodies verbatim (``kernels/conv2d/inner.py``,
+``kernels/pool2d/vpu_window.py::window_reduce``) so fused and unfused
+numerics cannot drift:
+
+* ``fused_vpu`` — Conv1-style logic-only accumulation; zero MXU passes.
+* ``fused_mxu`` — Conv2-style im2col + one MXU pass per tile.
+
+**int8 rung** (the PR 3 mixed-precision path): ``scale=`` feeds the
+combined (activation x per-channel weight) dequantization scale into
+the kernel; the int32 conv accumulator is rescaled to float *in
+register* and pooling/activation run on the rescaled tile — no
+intermediate fixed-point codes are materialized, and the block's single
+dequantize happens before its single write.
+
+Tiling: grid over (batch, Cout tiles), like the standalone conv IPs.
+Each grid step holds one input plane, one weight tile, the conv
+accumulator tile, and the (much smaller) pooled output tile in VMEM —
+the fused VMEM need is the price the planner weighs against the saved
+traffic (docs/adaptive_ips.md, "Fusion contract").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.resources import (Footprint, cost_cycles, mxu_pass_cycles,
+                                  vpu_op_cycles)
+from repro.kernels.activation.ref import KINDS, _FNS
+from repro.kernels.activation.vpu_exact import OP_COST
+from repro.kernels.conv2d.inner import accumulate_mxu, accumulate_vpu
+from repro.kernels.pool2d.ref import check_pool_geometry, norm_window_stride
+from repro.kernels.pool2d.vpu_window import window_reduce
+
+
+def _geometry(h, w, kh, kw, ph, pw, sh, sw):
+    """(conv Ho, conv Wo, pooled Ho, pooled Wo) of one fused block."""
+    co_h, co_w = h - kh + 1, w - kw + 1
+    return co_h, co_w, (co_h - ph) // sh + 1, (co_w - pw) // sw + 1
+
+
+def _kernel(x_ref, w_ref, *rest, style, kh, kw, ph, pw, sh, sw, mode,
+            kind, acc_dtype):
+    # rest is (scale_ref, o_ref) on the int8 rung, (o_ref,) otherwise.
+    scale_ref, o_ref = rest if len(rest) == 2 else (None, rest[0])
+    co_h = (o_ref.shape[1] - 1) * sh + ph
+    co_w = (o_ref.shape[2] - 1) * sw + pw
+    if style == "vpu":
+        x = x_ref[0].astype(acc_dtype)
+        acc = accumulate_vpu(x, w_ref, ho=co_h, wo=co_w, kh=kh, kw=kw,
+                             acc_dtype=acc_dtype)
+    else:
+        acc = accumulate_mxu(x_ref[0], w_ref, ho=co_h, wo=co_w, kh=kh,
+                             kw=kw, acc_dtype=acc_dtype)
+    if scale_ref is not None:
+        # The int8 rung's in-register dequantize: int32 accumulator ->
+        # float via the combined (act x per-channel weight) scale, while
+        # the tile is still VMEM-resident — no intermediate codes.
+        acc = acc.astype(jnp.float32) * scale_ref[0]
+    # Native-integer blocks keep the family oracle's fixed-point avg
+    # (int32 accumulate, floor division); everything else pools in f32.
+    pool_acc = (acc.dtype if jnp.issubdtype(acc.dtype, jnp.integer)
+                else jnp.float32)
+    pooled = window_reduce(acc, ho=o_ref.shape[1], wo=o_ref.shape[2],
+                           kh=ph, kw=pw, sh=sh, sw=sw, mode=mode,
+                           acc_dtype=pool_acc)
+    o_ref[0] = _FNS[kind](pooled.astype(jnp.float32))
+
+
+def _fused_call(style, x, w, scale, pool_window, pool_stride, pool_mode,
+                act_kind, block_cout, interpret):
+    if act_kind not in KINDS:
+        raise ValueError(f"unknown activation {act_kind!r}; have {KINDS}")
+    n, h, w_, cin = x.shape
+    kh, kw, _, cout = w.shape
+    (ph, pw), (sh, sw) = check_pool_geometry(
+        (n, h - kh + 1, w_ - kw + 1, cout), pool_window, pool_stride)
+    _, _, po, qo = _geometry(h, w_, kh, kw, ph, pw, sh, sw)
+    acc_dtype = (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
+                 else jnp.float32)
+    bc = min(block_cout, cout)
+    grid = (n, pl.cdiv(cout, bc))
+    in_specs = [
+        pl.BlockSpec((1, h, w_, cin), lambda b, c: (b, 0, 0, 0)),
+        pl.BlockSpec((kh, kw, cin, bc), lambda b, c: (0, 0, 0, c)),
+    ]
+    operands = [x, w]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, 1, 1, bc), lambda b, c: (0, 0, 0, c)))
+        operands.append(jnp.asarray(scale, jnp.float32).reshape(1, 1, 1, cout))
+    return pl.pallas_call(
+        functools.partial(_kernel, style=style, kh=kh, kw=kw, ph=ph, pw=pw,
+                          sh=sh, sw=sw, mode=pool_mode, kind=act_kind,
+                          acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, po, qo, bc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n, po, qo, cout), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "pool_window", "pool_stride", "pool_mode", "act_kind", "block_cout",
+    "interpret"))
+def fused_cnn_vpu(x: jnp.ndarray, w: jnp.ndarray, scale=None, *,
+                  pool_window=(2, 2), pool_stride=None,
+                  pool_mode: str = "max", act_kind: str = "relu",
+                  block_cout: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Logic-only fused block: Conv1-style MAC, pool + act in register.
+
+    ``scale`` (f32, broadcastable to (1, 1, 1, Cout)) switches on the
+    int8 rung: integer operands, int32 accumulate, in-register rescale.
+    """
+    return _fused_call("vpu", x, w, scale, pool_window, pool_stride,
+                       pool_mode, act_kind, block_cout, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "pool_window", "pool_stride", "pool_mode", "act_kind", "block_cout",
+    "interpret"))
+def fused_cnn_mxu(x: jnp.ndarray, w: jnp.ndarray, scale=None, *,
+                  pool_window=(2, 2), pool_stride=None,
+                  pool_mode: str = "max", act_kind: str = "relu",
+                  block_cout: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """MXU fused block: im2col + one MXU pass, pool + act in register."""
+    return _fused_call("mxu", x, w, scale, pool_window, pool_stride,
+                       pool_mode, act_kind, block_cout, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Footprints — the combined block priced as ONE launch: the conv working
+# set plus the pooled tile in VMEM, but ONLY input + weights + final
+# output in the DMA column.
+# ---------------------------------------------------------------------------
+def _pool_act_vpu_ops(n, cout, po, qo, ph, pw, kind):
+    pool = 2 * n * po * qo * cout * ph * pw     # gather + compare/add per tap
+    act = n * po * qo * cout * OP_COST.get(kind, 8)
+    return pool + act
+
+
+def footprint_vpu(n, h, w, cin, kh, kw, cout, ph, pw, sh, sw, *,
+                  itemsize=1, mode="max", kind="relu",
+                  block_cout: int = 128) -> Footprint:
+    co_h, co_w, po, qo = _geometry(h, w, kh, kw, ph, pw, sh, sw)
+    bc = min(block_cout, cout)
+    vmem = (h * w * cin * itemsize            # x plane
+            + kh * kw * cin * bc * itemsize   # weight tile
+            + co_h * co_w * bc * 4            # resident conv accumulator
+            + po * qo * bc * 4)               # pooled/activated tile
+    hbm = (n * h * w * cin * itemsize
+           + kh * kw * cin * cout * itemsize
+           + n * po * qo * cout * 4)          # ONLY the final tensor
+    vpu = (n * co_h * co_w * cout * kh * kw * cin * 2
+           + _pool_act_vpu_ops(n, cout, po, qo, ph, pw, kind))
+    if itemsize == 1:
+        vpu += n * co_h * co_w * cout         # in-register rescale
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
+                     vpu_ops=vpu,
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
+                     outputs_per_pass=1, max_operand_bits=32, launches=1)
+
+
+def footprint_mxu(n, h, w, cin, kh, kw, cout, ph, pw, sh, sw, *,
+                  itemsize=1, mode="max", kind="relu",
+                  block_cout: int = 128) -> Footprint:
+    co_h, co_w, po, qo = _geometry(h, w, kh, kw, ph, pw, sh, sw)
+    bc = min(block_cout, cout)
+    k = kh * kw * cin
+    vmem = (h * w * cin * itemsize
+            + co_h * co_w * k * itemsize      # im2col patches
+            + k * bc * itemsize
+            + co_h * co_w * bc * 4
+            + po * qo * bc * 4)
+    hbm = (n * h * w * cin * itemsize
+           + kh * kw * cin * cout * itemsize
+           + n * po * qo * cout * 4)
+    passes = n * ((cout + bc - 1) // bc)
+    cyc = n * mxu_pass_cycles(co_h * co_w, k, cout)
+    vpu = (n * co_h * co_w * k                # im2col data movement
+           + _pool_act_vpu_ops(n, cout, po, qo, ph, pw, kind))
+    if itemsize == 1:
+        vpu += n * co_h * co_w * cout
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
+                     vpu_ops=vpu,
+                     est_cycles=cost_cycles(max(cyc, vpu_op_cycles(vpu)), hbm),
+                     outputs_per_pass=1, max_operand_bits=32, launches=1)

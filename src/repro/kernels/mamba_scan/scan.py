@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  vpu_op_cycles)
 
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
@@ -86,5 +87,5 @@ def footprint(b, t, di, ds, *, block_di: int = 256) -> Footprint:
     vpu = b * t * di * ds * 6       # dA, dBx, h update, y reduce
     return Footprint(vmem_bytes=int(vmem), hbm_bytes=int(hbm), mxu_passes=0,
                      vpu_ops=int(vpu),
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.resources import Footprint, hbm_cycles, mxu_pass_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles)
 
 
 def _dual_kernel(a1_ref, a2_ref, b_ref, o1_ref, o2_ref, acc1, acc2, *,
@@ -98,6 +99,6 @@ def footprint_dual(m, k, n, *, itemsize=1, bm=256, bn=256, bk=512,
     cyc = scale * mxu_pass_cycles(m, k, n)
     passes = int(scale * pl.cdiv(m, bm) * pl.cdiv(n, bn) * pl.cdiv(k, bk))
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=max(passes, 1),
-                     vpu_ops=0, est_cycles=max(cyc, hbm_cycles(hbm)),
+                     vpu_ops=0, est_cycles=cost_cycles(cyc, hbm),
                      outputs_per_pass=2,
                      max_operand_bits=8 if int8 else 32)

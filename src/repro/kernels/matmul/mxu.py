@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.resources import (Footprint, hbm_cycles, mxu_pass_cycles,
-                                  vpu_op_cycles)
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles, vpu_op_cycles)
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, acc_dtype):
@@ -116,7 +116,7 @@ def footprint_mxu(m, k, n, *, itemsize=2, bm=256, bn=256, bk=512) -> Footprint:
     cyc = mxu_pass_cycles(m, k, n) * (1 if itemsize > 1 else 0.5)
     passes = pl.cdiv(m, bm) * pl.cdiv(n, bn) * pl.cdiv(k, bk)
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
-                     vpu_ops=0, est_cycles=max(cyc, hbm_cycles(hbm)),
+                     vpu_ops=0, est_cycles=cost_cycles(cyc, hbm),
                      outputs_per_pass=1, max_operand_bits=32)
 
 
@@ -127,5 +127,5 @@ def footprint_vpu(m, k, n, *, itemsize=2, bm=64, bn=128) -> Footprint:
     vpu = 2 * m * k * n
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
                      vpu_ops=vpu,
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import (Footprint, hbm_cycles, mxu_pass_cycles,
-                                  vpu_op_cycles)
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  mxu_pass_cycles, vpu_op_cycles)
 from repro.kernels.pool2d.ref import norm_window_stride, pool_dtypes
 
 
@@ -95,5 +95,5 @@ def footprint(n, h, w, c, kh, kw, sh, sw, *, itemsize=1, mode="max",
         vpu = 2 * move          # movement + the vectorized max reduce
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
                      vpu_ops=vpu,
-                     est_cycles=max(cyc, vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(max(cyc, vpu_op_cycles(vpu)), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

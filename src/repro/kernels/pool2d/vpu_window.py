@@ -17,13 +17,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.resources import Footprint, hbm_cycles, vpu_op_cycles
+from repro.core.resources import (Footprint, cost_cycles, hbm_cycles,
+                                  vpu_op_cycles)
 from repro.kernels.pool2d.ref import norm_window_stride, pool_dtypes
 
 
-def _kernel(x_ref, o_ref, *, kh, kw, sh, sw, mode, acc_dtype):
-    ho, wo = o_ref.shape[1], o_ref.shape[2]
-    x = x_ref[0]
+def window_reduce(x, *, ho, wo, kh, kw, sh, sw, mode, acc_dtype):
+    """The family's windowed reduce on an already-resident (H, W, C)
+    tile: an unrolled chain of strided-slice compares (max) or adds
+    (avg), returning (Ho, Wo, C).  Shared verbatim by the standalone
+    kernel below and the fused conv->pool->act members
+    (``kernels/fused/cnn_block.py``) so the two paths cannot drift."""
     if mode == "avg":
         x = x.astype(acc_dtype)
     acc = None
@@ -43,7 +47,13 @@ def _kernel(x_ref, o_ref, *, kh, kw, sh, sw, mode, acc_dtype):
             acc = acc // count
         else:
             acc = acc / count
-    o_ref[0] = acc
+    return acc
+
+
+def _kernel(x_ref, o_ref, *, kh, kw, sh, sw, mode, acc_dtype):
+    o_ref[0] = window_reduce(x_ref[0], ho=o_ref.shape[1], wo=o_ref.shape[2],
+                             kh=kh, kw=kw, sh=sh, sw=sw, mode=mode,
+                             acc_dtype=acc_dtype)
 
 
 @functools.partial(jax.jit,
@@ -84,5 +94,5 @@ def footprint(n, h, w, c, kh, kw, sh, sw, *, itemsize=1, mode="max",
     vpu = 2 * n * ho * wo * c * kh * kw
     return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
                      vpu_ops=vpu,
-                     est_cycles=max(vpu_op_cycles(vpu), hbm_cycles(hbm)),
+                     est_cycles=cost_cycles(vpu_op_cycles(vpu), hbm),
                      outputs_per_pass=1, max_operand_bits=32)

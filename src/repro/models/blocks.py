@@ -183,11 +183,48 @@ def cnn_block_site_specs(x_shape, w_shape, *, x_dtype, w_dtype=None,
     return specs, act_aval
 
 
+def _apply_fused_site(fused_s, p, x, *, pool_window, pool_stride, pool_mode,
+                      activation, interpret, plan, quant_report,
+                      tile_overrides):
+    """Execute one planned fused site: the whole conv -> pool -> act
+    chain in a single launch.  The lowered rungs run the quantized fused
+    kernel (int8: in-register rescale of the int32 accumulator);
+    ``quant_report`` measures the one fused output against the composite
+    family oracle."""
+    if plan is not None:
+        plan[fused_s.spec.name] = (fused_s.ip, fused_s.footprint)
+    tile_kwargs = dict((tile_overrides or {}).get(fused_s.spec.name, {}))
+    if fused_s.lowered:
+        from repro.quant.ops import quantized_fused_cnn_block
+        y = quantized_fused_cnn_block(
+            x, p["w"], pool_window=pool_window, pool_stride=pool_stride,
+            pool_mode=pool_mode, activation=activation,
+            bits=fused_s.precision_bits, ip=fused_s.ip.name,
+            interpret=interpret)
+    else:
+        from repro.kernels.fused.ops import fused_cnn_block
+        y = fused_cnn_block(x, p["w"], pool_window=pool_window,
+                            pool_stride=pool_stride, pool_mode=pool_mode,
+                            activation=activation, ip=fused_s.ip.name,
+                            interpret=interpret, **tile_kwargs)
+    if quant_report is not None:
+        from repro.core.library import get_family
+        from repro.quant.report import record
+        ref = get_family("cnn_fused").reference(
+            x.astype(jnp.float32), p["w"].astype(jnp.float32),
+            window=pool_window, stride=pool_stride, mode=pool_mode,
+            kind=activation)
+        record(quant_report, fused_s.spec.name, fused_s.precision_bits,
+               y, ref)
+    return y
+
+
 def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     pool_stride=None, pool_mode: str = "max",
                     activation: str = "relu", interpret: bool = True,
                     plan=None, site: str = "cnn_block", network=None,
-                    ladder=(), quant_report=None, tile_overrides=None):
+                    ladder=(), quant_report=None, tile_overrides=None,
+                    fuse: bool = False):
     """One adaptive CNN layer: conv -> pool -> activation.
 
     The three sites are planned as one ``NetworkPlan`` under a
@@ -198,6 +235,17 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
     to execute from an outer plan instead.  When ``plan`` (a dict) is
     passed, the three (KernelIP, Footprint) decisions are recorded
     under ``site`` — renderable with ``describe_plan``.
+
+    **Fusion.** ``fuse=True`` plans with fusion-aware substitution
+    (``core.plan.plan_network(..., fuse=True)``): when the planner maps
+    this block onto a single fused site (``<site>.fused``), the whole
+    conv -> pool -> activation chain executes as ONE ``pallas_call``
+    with no intermediate HBM round-trips — including the lowered rungs,
+    where the int8 kernel rescales its int32 accumulator in register.
+    Execution is plan-driven: a supplied ``network`` containing
+    ``<site>.fused`` runs fused regardless of ``fuse``, and the planner
+    falls back to the three-site chain whenever the fused footprint
+    does not fit (docs/adaptive_ips.md, "Fusion contract").
 
     **Mixed precision.** With a ``ladder`` the planner may assign any
     site a lowered operand width; execution honors the plan with
@@ -225,18 +273,33 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
         pool_mode=pool_mode, activation=activation, site=site,
         ladder=ladder)
     if network is None:
-        network = plan_network(specs, budget)
+        network = plan_network(specs, budget, fuse=fuse)
     else:
         # An outer plan was built from its own view of the graph; its
         # feasibility guarantees are void if that view disagrees with
         # this call's actual shapes/dtypes/knobs.
-        for spec in specs:
+        from repro.core.library import get_family
+        fused_view = get_family("cnn_fused").fuse_sites(tuple(specs))
+        if f"{site}.fused" in network and fused_view is None:
+            raise ValueError(
+                f"plan/site mismatch at '{site}.fused': the supplied "
+                f"network fused this block, but this call's sites "
+                f"{[s.name for s in specs]} are not fusable")
+        check = ([fused_view] if f"{site}.fused" in network else specs)
+        for spec in check:
             planned = network.site(spec.name).spec
             if planned != spec:
                 raise ValueError(
                     f"plan/site mismatch at {spec.name!r}: the supplied "
                     f"network was planned for {planned}, but this call "
                     f"executes {spec}")
+
+    if f"{site}.fused" in network:
+        return _apply_fused_site(
+            network.site(f"{site}.fused"), p, x, pool_window=pool_window,
+            pool_stride=pool_stride, pool_mode=pool_mode,
+            activation=activation, interpret=interpret, plan=plan,
+            quant_report=quant_report, tile_overrides=tile_overrides)
 
     conv_s = network.site(f"{site}.conv")
     pool_s = network.site(f"{site}.pool")

@@ -88,7 +88,8 @@ def cnn_frontend_site_specs(p, image_shape, image_dtype, *,
 def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
                        activation: str = "relu", interpret: bool = True,
                        plan=None, ladder=(), quant_report=None,
-                       network=None, tile_overrides=None):
+                       network=None, tile_overrides=None,
+                       fuse: bool = False):
     """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model).
 
     The entire stack (every conv/pool/act of every block) is planned as
@@ -109,6 +110,11 @@ def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
     NOTE the lowered blocks dequantize at their egress, so the ladder
     never changes this function's output dtype — only its accuracy,
     which the report quantifies.
+
+    ``fuse=True`` plans the stack fusion-aware: every block the planner
+    can map onto a fused conv->pool->act site executes as ONE launch
+    (see ``apply_cnn_block``); blocks whose fused footprint does not
+    fit keep the three-launch chain.
     """
     from repro.core.plan import plan_network
     from repro.models.blocks import apply_cnn_block
@@ -117,7 +123,7 @@ def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
             cnn_frontend_site_specs(p, images.shape, images.dtype,
                                     pool_window=pool_window,
                                     activation=activation, ladder=ladder),
-            budget)
+            budget, fuse=fuse)
     x = images
     for li, bp in enumerate(p["blocks"]):
         x = apply_cnn_block(bp, x, pool_window=pool_window,

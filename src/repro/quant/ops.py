@@ -111,6 +111,44 @@ def quantized_activation(x: jnp.ndarray, *, kind: str = "relu",
     return activation(dequantize(xq), kind=kind, ip=ip, interpret=interpret)
 
 
+def quantized_fused_cnn_block(x: jnp.ndarray, w: jnp.ndarray, *,
+                              pool_window=(2, 2), pool_stride=None,
+                              pool_mode: str = "max",
+                              activation: str = "relu", bits: int = 8,
+                              ip: Optional[str] = None,
+                              interpret: bool = True,
+                              act_scale: Optional[jnp.ndarray] = None
+                              ) -> jnp.ndarray:
+    """Fused conv->pool->act with operands quantized to ``bits``; f32
+    result.
+
+    The int8 rung is the fused counterpart of the PR 3 mixed-precision
+    chain: int8 codes enter the ONE launch, the int32 conv accumulator
+    is rescaled by the combined (activation x per-channel weight) scale
+    *in register*, and pooling + activation run on the rescaled tile —
+    no intermediate fixed-point codes are materialized and the block
+    performs no extra dequantize launch.  Wider lowered widths
+    fake-quant the operands and run the float kernel.
+    """
+    _check_bits(bits)
+    from repro.kernels.fused.ops import fused_cnn_block, resolve_member
+    if bits == 8:
+        xq = quantize_acts(x, bits=8, scale=act_scale)
+        wq = quantize_weights(w, axis=-1, bits=8)
+        scale = (xq.scale * wq.scale).reshape(1, 1, 1, -1)
+        member = resolve_member(ip or "fused_vpu")
+        return member(xq.q, wq.q, scale,
+                      pool_window=tuple(pool_window),
+                      pool_stride=pool_stride,
+                      pool_mode=pool_mode, act_kind=activation,
+                      interpret=interpret)
+    return fused_cnn_block(fake_quant(x, bits=bits),
+                           fake_quant(w, bits=bits, axis=-1),
+                           pool_window=pool_window, pool_stride=pool_stride,
+                           pool_mode=pool_mode, activation=activation,
+                           ip=ip, interpret=interpret)
+
+
 def quantized_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bits: int = 8,
                      ip: Optional[str] = None, interpret: bool = True,
                      act_scale: Optional[jnp.ndarray] = None,

@@ -88,8 +88,14 @@ class AdaptiveServer:
     def __init__(self, budget: Optional[ResourceBudget] = None, *,
                  policy: str = "demand", rebalance_threshold: float = 0.05,
                  max_batch: int = 4, autotune: bool = False,
-                 interpret: bool = True, demand_alpha: float = 0.5):
+                 interpret: bool = True, demand_alpha: float = 0.5,
+                 fuse: bool = False):
         self.budget = budget or ResourceBudget()
+        # fuse=True serves every tenant through fusion-aware plans: a
+        # block the planner can fuse runs conv->pool->act as ONE launch
+        # (falling back per block when the fused footprint won't fit the
+        # tenant's slice) — the hot-path est-cycles win of this PR.
+        self.fuse = fuse
         self.arbiter = BudgetArbiter(self.budget, policy=policy,
                                      rebalance_threshold=rebalance_threshold,
                                      demand_alpha=demand_alpha)
@@ -128,13 +134,16 @@ class AdaptiveServer:
         # Admission check: both the max-batch and the one-sample graphs
         # must plan under the full device (raises the planner's
         # canonical error otherwise) — and both plans warm the share
-        # cache for the replan fast path.
-        plan_network(canonical, self.budget)
+        # cache for the replan fast path.  The floor stays priced on the
+        # unfused graph: fusion-aware planning always falls back to the
+        # three-site chain, so the unfused minimum remains the sound
+        # feasibility guarantee the arbiter must honor.
+        plan_network(canonical, self.budget, fuse=self.fuse)
         floor = network_min_fraction(canonical, self.budget)
         unit = plan_network(
             self._specs(params, (1,) + input_shape, "float32",
                         pool_window, activation, ladder),
-            self.budget).total_cycles
+            self.budget, fuse=self.fuse).total_cycles
         tenant = Tenant(name=name, params=params, input_shape=input_shape,
                         pool_window=tuple(pool_window), activation=activation,
                         ladder=tuple(ladder), measure_quant=measure_quant,
@@ -221,7 +230,7 @@ class AdaptiveServer:
                 self._specs_cache.pop(next(iter(self._specs_cache)))
             self._specs_cache[skey] = specs
         hits0, misses0 = STATS.plan_hits, STATS.plan_misses
-        plan = replan(specs, slice_budget)
+        plan = replan(specs, slice_budget, fuse=self.fuse)
         tile_overrides = None
         if self.autotune:
             tkey = (specs, slice_budget)
@@ -239,7 +248,8 @@ class AdaptiveServer:
                                interpret=self.interpret,
                                ladder=tenant.ladder,
                                quant_report=quant_report,
-                               tile_overrides=tile_overrides)
+                               tile_overrides=tile_overrides,
+                               fuse=self.fuse)
         start = max(tenant.lane_free, max(r.arrival for r in batch))
         finish = start + plan.total_cycles
         tenant.lane_free = finish
