@@ -1,0 +1,123 @@
+"""Calibration demo — teach the planner what the stopwatch knows.
+
+The planner's analytical cost model (est-cycles) can disagree with
+measured wall-clock; the calibration loop closes that gap in three
+moves, narrated here on a 3-layer CNN:
+
+1. SAMPLE  — plan the network, run every distinct planned site
+   standalone, and record (member, footprint, measured us) samples.
+2. FIT     — per-member affine fits over the footprint's analytical
+   axes (compute cycles, HBM bytes), global fallback under 3 samples.
+3. RE-PLAN — the same ``plan_network`` call with ``calibration=`` now
+   ranks members and fusion groups by measured cost; a synthetic
+   "fused is slow on this machine" table demonstrably flips the
+   fused/unfused decision while numerics stay identical.
+
+The table round-trips through versioned JSON bit-exactly, so a fitted
+table ships with a deployment.  See docs/adaptive_ips.md,
+"Calibration contract", and benchmarks/run.py::table_calibration for
+the asserted end-to-end loop.
+
+    PYTHONPATH=src python examples/calibration_demo.py
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.calibrate_cost import (AffineFit, CalibrationTable,  # noqa: E402
+                                       collect_plan_samples, member_key)
+from repro.core.plan import clear_plan_cache, plan_network  # noqa: E402
+from repro.core.resources import ResourceBudget  # noqa: E402
+from repro.models.blocks import cnn_block_site_specs  # noqa: E402
+
+LAYERS = [(8, 16), (16, 32), (32, 32)]
+
+
+def network_specs(ladder=()):
+    specs, shape = [], (2, 32, 32, LAYERS[0][0])
+    for li, (cin, cout) in enumerate(LAYERS):
+        layer, out = cnn_block_site_specs(
+            shape, (3, 3, cin, cout), x_dtype="float32", pool_mode="max",
+            activation="relu", site=f"layer{li}", ladder=ladder)
+        specs += layer
+        shape = out.shape
+    return tuple(specs)
+
+
+def describe(tag, plan, table=None):
+    fams = [s.spec.family for s in plan.sites]
+    fused = fams.count("cnn_fused")
+    print(f"  {tag:<22} {len(plan.sites)} sites, {fused} fused; "
+          f"est={plan.total_cycles:.3e} cyc, "
+          f"calibrated={plan.calibrated_cycles(table):.3e} cyc")
+
+
+def main():
+    budget = ResourceBudget()
+    specs = network_specs(ladder=(16, 8))
+    clear_plan_cache()
+
+    print("== 1. SAMPLE: measure every distinct site the analytical "
+          "plans chose ==")
+    plans = [plan_network(specs, budget, fuse=f) for f in (False, True)]
+    table = collect_plan_samples(plans, repeat=3)
+    print(f"  {table.sample_count()} samples over "
+          f"{len({s.member for s in table.samples})} executed members")
+
+    print("== 2. FIT: per-member affine models over (compute, hbm) ==")
+    table.fit()
+    for m, f in sorted(table.fits.items()):
+        print(f"  {m:<28} us = {f.us_per_compute_cycle:.3g}*cyc "
+              f"+ {f.us_per_hbm_byte:.3g}*B + {f.overhead_us:.3g}")
+    text = table.to_json()
+    assert CalibrationTable.from_json(text).to_json() == text
+    print(f"  JSON round-trip bit-exact ({len(text)} bytes, "
+          f"fingerprint {table.fingerprint()})")
+
+    print("== 3. RE-PLAN: the same call, measured objective ==")
+    describe("analytical fuse=True", plans[1], table)
+    cal = plan_network(specs, budget, fuse=True, calibration=table)
+    describe("calibrated fuse=True", cal, table)
+
+    print("\n== counterfactual: a host where the fused member measures "
+          "slow ==")
+    slow = CalibrationTable(fits={
+        member_key(s.ip.name, s.precision_bits, s.spec.native_bits):
+            AffineFit(0.0, 0.0, 1e6, 3)
+        for p in plans for s in p.sites if s.spec.family == "cnn_fused"})
+    flipped = plan_network(specs, budget, fuse=True, calibration=slow)
+    describe("calibrated fuse=True", flipped, slow)
+    assert all(s.spec.family != "cnn_fused" for s in flipped.sites), \
+        "a measured-slow fused member must unfuse the plan"
+    print("  -> the planner unfused every block: it optimizes what was "
+          "measured,\n     while feasibility (fits, floors) stayed "
+          "analytical")
+
+    # numerics never depend on the cost model that picked the plan
+    from repro.models.blocks import apply_cnn_block
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2, 32, 32, 8)).astype(np.float32)
+    ws = [rng.normal(0, (9 * cin) ** -0.5, (3, 3, cin, cout))
+          .astype(np.float32) for cin, cout in LAYERS]
+
+    def run(network):
+        y = np.asarray(x)
+        import jax.numpy as jnp
+        y = jnp.asarray(y)
+        for li, w in enumerate(ws):
+            y = apply_cnn_block({"w": w}, y, pool_mode="max",
+                                activation="relu", site=f"layer{li}",
+                                network=network, ladder=(16, 8))
+        return np.asarray(y)
+
+    np.testing.assert_array_equal(run(cal), run(flipped))
+    print("  -> identical outputs under both cost models (budget/"
+          "calibration\n     change the implementation, never the result)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.resources import (LANE, MXU_DIM, Footprint, ResourceBudget,
@@ -65,28 +64,37 @@ def sweep(footprint_fn: Callable[..., Footprint], grid: Dict[str, Sequence[int]]
 
 def autotune_matmul(m: int, k: int, n: int, *, itemsize: int = 2,
                     budget: Optional[ResourceBudget] = None,
-                    measure: bool = False) -> TuneResult:
-    """Tile sweep for mm_mxu; MXU-aligned candidates only."""
+                    measure: bool = False, table=None) -> TuneResult:
+    """Tile sweep for mm_mxu; MXU-aligned candidates only.
+
+    ``measure=True`` refines the top analytical candidates by wall
+    clock (the shared ``calibrate_cost.timeit_us`` median harness);
+    passing a ``CalibrationTable`` as ``table`` additionally records
+    each (footprint, measured µs) pair as a calibration sample for the
+    ``matmul.mm_mxu`` member — the tuner doubles as a sample collector.
+    """
     from repro.kernels.matmul.mxu import footprint_mxu, mm_mxu
     budget = budget or ResourceBudget()
     grid = {"bm": _aligned(MXU_DIM, min(m, 1024), MXU_DIM),
             "bn": _aligned(MXU_DIM, min(n, 1024), MXU_DIM),
             "bk": _aligned(MXU_DIM, min(k, 2048), MXU_DIM)}
     meas = None
-    if measure:
-        import jax
+    if measure or table is not None:
         import numpy as np
         import jax.numpy as jnp
+        from repro.core.calibrate_cost import timeit_us
         rng = np.random.default_rng(0)
         a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
         b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
 
         def run(**params):
-            fn = lambda: mm_mxu(a, b, **params)
-            jax.block_until_ready(fn())
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            return (time.perf_counter() - t0) * 1e6
+            us = timeit_us(mm_mxu, a, b, **params)
+            if table is not None:
+                table.record("matmul.mm_mxu",
+                             footprint_mxu(m, k, n, itemsize=itemsize,
+                                           **params),
+                             us, family="matmul")
+            return us
 
         meas = run
     res = sweep(footprint_mxu, grid, budget, m, k, n, itemsize=itemsize,

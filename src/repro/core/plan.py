@@ -47,6 +47,17 @@ the single selection engine behind every family:
 * ``network_min_fraction(specs, budget)`` — the smallest fraction of a
   budget under which the graph still plans (ladder rungs included);
   the arbiter floors each tenant's share here.
+* **Calibrated cost** (``calibration=``): every decision point that
+  *ranks* — member selection, fusion-group substitution, the
+  partitioner's cost shares — accepts a measurement-derived
+  ``CalibrationTable`` (``core/calibrate_cost.py``) and prices
+  footprints by predicted wall-clock instead of analytical
+  ``est_cycles``.  Feasibility (fits, needs floors,
+  ``network_min_fraction``) is deliberately untouched: calibration
+  rescales cost, not resources.  Plans memoize on the table's
+  ``key()`` (schema version + fits fingerprint), so a refitted table
+  never serves stale cached plans (docs/adaptive_ips.md,
+  "Calibration contract").
 
 Everything here is pure trace-time Python: no jax arrays, no jit.
 """
@@ -56,6 +67,7 @@ import dataclasses
 import json
 from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 
+from repro.core.calibrate_cost import calibration_key, member_key
 from repro.core.ip import IPFamily, KernelIP, SiteSpec
 from repro.core.resources import Footprint, ResourceBudget
 
@@ -155,8 +167,14 @@ def _get_family(family: Union[str, IPFamily]) -> IPFamily:
 # The selection engine (moved here from core/selector.py; the shims there
 # keep the old five entry points alive).
 # ---------------------------------------------------------------------------
-def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
-    """Ranking key: (primary cost, tie-breaks). Lower is better."""
+def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget,
+          calibration=None, cal_suffix: str = ""):
+    """Ranking key: (primary cost, tie-breaks). Lower is better.
+    With a ``calibration`` table the primary cost is the measured-model
+    prediction for this member's executed variant (``ip.name`` plus the
+    lowered-rung suffix); the pressure multipliers and VMEM tie-break
+    are unchanged — they steer *which* resources are spent, calibration
+    corrects *how much* the spend costs."""
     parallel_bonus = 0
     if budget.prefer_parallel_streams:
         parallel_bonus = 0 if fp.outputs_per_pass >= 2 else 1
@@ -168,13 +186,15 @@ def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget):
         vpu_pressure = fp.vpu_ops / budget.vpu_ops_budget
     # Normalize per produced output so dual-stream members aren't
     # penalized for doing two ops' work.
-    cycles = fp.est_cycles / max(fp.outputs_per_pass, 1)
+    cycles = (fp.calibrated_cycles(calibration, ip.name + cal_suffix)
+              / max(fp.outputs_per_pass, 1))
     return (parallel_bonus, cycles * (1.0 + mxu_pressure + vpu_pressure),
             fp.vmem_bytes)
 
 
 def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
-            fp_args: tuple, fp_kwargs: dict, op_bits: int):
+            fp_args: tuple, fp_kwargs: dict, op_bits: int,
+            calibration=None, cal_suffix: str = ""):
     """Returns the winning (KernelIP, Footprint) pair."""
     feasible = []
     for ip in candidates:
@@ -184,7 +204,8 @@ def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
             continue
         if not fp.fits(budget):
             continue
-        feasible.append((_rank(ip, fp, budget), ip.name, ip, fp))
+        feasible.append((_rank(ip, fp, budget, calibration, cal_suffix),
+                         ip.name, ip, fp))
     if not feasible:
         raise ValueError(
             "no feasible IP under budget "
@@ -205,7 +226,7 @@ def _width_budget(budget: ResourceBudget, spec: SiteSpec,
     return dataclasses.replace(budget, precision_bits=bits)
 
 
-def _select_site(spec: SiteSpec, budget: ResourceBudget):
+def _select_site(spec: SiteSpec, budget: ResourceBudget, calibration=None):
     """Select for one site, descending its precision ladder on failure.
 
     Widths are tried native-first (precision is only sacrificed when the
@@ -222,18 +243,28 @@ def _select_site(spec: SiteSpec, budget: ResourceBudget):
     err = None
     for bits in widths:
         req = fam.plan_site(spec.at_precision(bits))
+        suffix = f"@int{bits}" if bits < spec.native_bits else ""
         try:
             ip, fp = _select(req.candidates, _width_budget(budget, spec, bits),
-                             req.fp_args, dict(req.fp_kwargs), req.op_bits)
+                             req.fp_args, dict(req.fp_kwargs), req.op_bits,
+                             calibration, suffix)
             return ip, fp, bits
         except ValueError as e:
             err = err or e      # surface the native-width failure
     raise err
 
 
+def _site_cost(ip: KernelIP, fp: Footprint, bits: int, spec: SiteSpec,
+               calibration=None) -> float:
+    """One selected site's ranking cost: calibrated (or analytical)
+    cycles per produced output."""
+    key = member_key(ip.name, bits, spec.native_bits)
+    return fp.calibrated_cycles(calibration, key) / max(fp.outputs_per_pass, 1)
+
+
 def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
               budget: Optional[ResourceBudget] = None,
-              with_footprint: bool = False):
+              with_footprint: bool = False, calibration=None):
     """Generic resource-driven selection for one site of any family.
 
     The family's registered site adapter turns ``spec`` into candidates
@@ -247,7 +278,7 @@ def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
         raise ValueError(f"site {spec.name!r} is a {spec.family!r} site, "
                          f"not {fam.name!r}")
     budget = budget or ResourceBudget()
-    ip, fp, _ = _select_site(spec, budget)
+    ip, fp, _ = _select_site(spec, budget, calibration)
     return (ip, fp) if with_footprint else ip
 
 
@@ -310,6 +341,16 @@ class NetworkPlan:
     @property
     def total_cycles(self) -> float:
         return sum(s.footprint.est_cycles / max(s.footprint.outputs_per_pass, 1)
+                   for s in self.sites)
+
+    def calibrated_cycles(self, calibration) -> float:
+        """Total cost under a measurement-derived ``CalibrationTable``
+        (``core/calibrate_cost.py``): each site's footprint priced by
+        the fit of its executed variant (lowered rungs keyed
+        ``@int<bits>``).  ``calibration=None`` degrades to
+        ``total_cycles`` — the analytical model."""
+        return sum(_site_cost(s.ip, s.footprint, s.precision_bits, s.spec,
+                              calibration)
                    for s in self.sites)
 
     @property
@@ -416,7 +457,7 @@ def _site_need(spec: SiteSpec, budget: ResourceBudget) -> float:
 
 def plan_network(specs: Iterable[SiteSpec],
                  budget: Optional[ResourceBudget] = None, *,
-                 fuse: bool = False) -> "NetworkPlan":
+                 fuse: bool = False, calibration=None) -> "NetworkPlan":
     """Map a network of sites onto one partitioned budget (memoized).
 
     Partitioning: fractions proportional to each site's cheapest
@@ -435,22 +476,30 @@ def plan_network(specs: Iterable[SiteSpec],
     fused footprint then breaks the partition are unfused again one at
     a time (largest minimal need first) until the plan closes — the
     fused plan can only ever *gain* feasibility over the unfused one.
+
+    ``calibration=`` re-ranks every cost comparison (member selection,
+    the fused-vs-unfused decision, the partition shares) by the table's
+    measured-model predictions; feasibility and floors are unchanged.
+    The plan cache keys on the table's identity
+    (``CalibrationTable.key()``), so plans under different — or
+    refitted — tables never collide.
     """
     budget = budget or ResourceBudget()
-    key = (tuple(specs), budget, fuse)
+    key = (tuple(specs), budget, fuse, calibration_key(calibration))
     cached = _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
     STATS.plan_misses += 1
-    plan = _plan_uncached(key[0], budget, fuse=fuse)
+    plan = _plan_uncached(key[0], budget, fuse=fuse, calibration=calibration)
     _cache_put(key, plan)
     return plan
 
 
 def replan(specs: Iterable[SiteSpec],
            budget: Optional[ResourceBudget] = None, *,
-           fuse: bool = False, strict: bool = False) -> "NetworkPlan":
+           fuse: bool = False, strict: bool = False,
+           calibration=None) -> "NetworkPlan":
     """Re-plan a known graph under a moved budget — the serving fast path.
 
     Exact ``(graph, budget)`` repeats are cache hits like
@@ -473,37 +522,49 @@ def replan(specs: Iterable[SiteSpec],
     plan and silently replaced by it on divergence
     (``replan_strict_mismatch`` counts the catches) — tests and audits
     run strict; the serving loop accepts the heuristic.
+
+    With ``calibration=`` the fast path reuses only shares memoized
+    under the *same* table identity — a refreshed (refitted) table
+    finds no shares and falls cold, re-deriving the assignment from the
+    new predictions instead of serving a stale-calibration split.
     """
     budget = budget or ResourceBudget()
     specs = tuple(specs)
-    key = (specs, budget, fuse)
+    calkey = calibration_key(calibration)
+    key = (specs, budget, fuse, calkey)
     cached = None if strict else _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
-    eff = _FUSE_CACHE.get(specs) if fuse else specs
-    shares = _SHARE_CACHE.get(eff) if eff is not None else None
+    eff = _FUSE_CACHE.get((specs, calkey)) if fuse else specs
+    shares = (_SHARE_CACHE.get((eff, calkey))
+              if eff is not None else None)
     if shares is None:
         STATS.replan_cold += 1
         if not strict:
-            return plan_network(specs, budget, fuse=fuse)
+            return plan_network(specs, budget, fuse=fuse,
+                                calibration=calibration)
         # strict must not trust plan_network's cache: a prior NON-strict
         # replan may have stored its heuristic plan under this very key.
         STATS.plan_misses += 1
-        plan = _plan_uncached(specs, budget, fuse=fuse)
+        plan = _plan_uncached(specs, budget, fuse=fuse,
+                              calibration=calibration)
         _cache_put(key, plan)
         return plan
     STATS.plan_misses += 1
     fell_cold = False
     try:
-        plan = _assign_with_repair(eff, budget, shares)
+        plan = _assign_with_repair(eff, budget, shares,
+                                   calibration=calibration)
         STATS.replan_fast += 1
     except ValueError:
         STATS.replan_cold += 1
         fell_cold = True
-        plan = _plan_uncached(specs, budget, fuse=fuse)
+        plan = _plan_uncached(specs, budget, fuse=fuse,
+                              calibration=calibration)
     if strict and not fell_cold:   # a fallen-cold plan IS the cold plan
-        cold = _plan_uncached(specs, budget, fuse=fuse)
+        cold = _plan_uncached(specs, budget, fuse=fuse,
+                              calibration=calibration)
         if _assignment(plan) != _assignment(cold):
             STATS.replan_strict_mismatch += 1
             plan = cold
@@ -534,20 +595,23 @@ def network_min_fraction(specs: Iterable[SiteSpec],
 
 
 def plan_single(spec: SiteSpec,
-                budget: Optional[ResourceBudget] = None) -> "PlannedSite":
+                budget: Optional[ResourceBudget] = None,
+                calibration=None) -> "PlannedSite":
     """One-site plan (the kernels' ``budget=`` path): full budget, same
     engine, same memoization.  Returns the ``PlannedSite`` — callers
     needing only the member read ``.ip``; the quantized wrappers also
     read ``.precision_bits`` to decide whether to lower execution."""
-    return plan_network((spec,), budget).site(spec.name)
+    return plan_network((spec,), budget,
+                        calibration=calibration).site(spec.name)
 
 
 def _try_assign(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                fractions: Sequence[float]):
+                fractions: Sequence[float], calibration=None):
     planned, failed = [], []
     for spec, frac in zip(specs, fractions):
         try:
-            ip, fp, bits = _select_site(spec, budget.scaled(frac))
+            ip, fp, bits = _select_site(spec, budget.scaled(frac),
+                                        calibration)
             planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
                                        fraction=frac,
                                        precision_bits=bits))
@@ -558,13 +622,14 @@ def _try_assign(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
 
 
 def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                        shares: Sequence[float]) -> NetworkPlan:
+                        shares: Sequence[float],
+                        calibration=None) -> NetworkPlan:
     """Slice assignment under cost ``shares``, with the greedy repair:
     if any site has no feasible member under its proportional slice,
     every site is floored at the minimal slice its cheapest member (at
     its cheapest legal width) needs and only the surplus follows the
     shares."""
-    planned, failed = _try_assign(specs, budget, shares)
+    planned, failed = _try_assign(specs, budget, shares, calibration)
     if failed:
         needs = [_site_need(s, budget) for s in specs]
         total_need = sum(needs)
@@ -577,7 +642,7 @@ def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
         surplus = 1.0 - total_need
         fractions = [need + surplus * share
                      for need, share in zip(needs, shares)]
-        planned, failed = _try_assign(specs, budget, fractions)
+        planned, failed = _try_assign(specs, budget, fractions, calibration)
         if failed:  # pragma: no cover — needs floor guarantees feasibility
             raise ValueError(
                 f"budget partition repair failed for sites {failed} under "
@@ -620,24 +685,30 @@ def _substitute(specs: Tuple[SiteSpec, ...], groups) -> Tuple[SiteSpec, ...]:
     return tuple(out)
 
 
-def _fused_specs(specs: Tuple[SiteSpec, ...], select):
+def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None):
     """The fusion decision at full budget: substitute a group's fused
     site when the fused member is feasible AND its combined footprint
     prices at or below the unfused chain's cheapest members (or the
     chain is outright infeasible — fusion can rescue it).  Returns
-    ``(effective_specs, chosen_groups)``."""
+    ``(effective_specs, chosen_groups)``.
+
+    This comparison is where the analytical model was most wrong
+    (ROADMAP: fused modeled cheaper everywhere, measured slower on half
+    the budgets), so with ``calibration`` both sides re-rank by the
+    measured-model cost of their selected members — groups unfuse when
+    the measurements say the one-launch member is the slower path."""
     chosen = []
     for start, length, fspec in _fusion_groups(specs):
         try:
-            _, ffp, _ = select(fspec)
+            fip, ffp, fbits = select(fspec)
         except ValueError:
             continue
-        fcost = ffp.est_cycles / max(ffp.outputs_per_pass, 1)
+        fcost = _site_cost(fip, ffp, fbits, fspec, calibration)
         try:
             ucost = 0.0
             for s in specs[start:start + length]:
-                _, ufp, _ = select(s)
-                ucost += ufp.est_cycles / max(ufp.outputs_per_pass, 1)
+                uip, ufp, ubits = select(s)
+                ucost += _site_cost(uip, ufp, ubits, s, calibration)
         except ValueError:
             ucost = None
         if ucost is None or fcost <= ucost:
@@ -646,13 +717,14 @@ def _fused_specs(specs: Tuple[SiteSpec, ...], select):
 
 
 def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                   fuse: bool = False) -> NetworkPlan:
+                   fuse: bool = False, calibration=None) -> NetworkPlan:
     if not specs:
         return NetworkPlan(budget=budget, sites=())
     names = [s.name for s in specs]
     if len(set(names)) != len(names):
         dupes = sorted({n for n in names if names.count(n) > 1})
         raise ValueError(f"duplicate site names in network: {dupes}")
+    calkey = calibration_key(calibration)
 
     # One full-budget selection per distinct site for this whole call:
     # the fusion decision and the baseline price the same specs, and the
@@ -661,14 +733,15 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
 
     def select_full(spec: SiteSpec):
         if spec not in memo:
-            memo[spec] = _select_site(spec, budget)
+            memo[spec] = _select_site(spec, budget, calibration)
         return memo[spec]
 
-    eff, chosen = (_fused_specs(specs, select_full) if fuse
+    eff, chosen = (_fused_specs(specs, select_full, calibration) if fuse
                    else (specs, []))
     while True:
         try:
-            plan = _plan_effective(eff, budget, select_full)
+            plan = _plan_effective(eff, budget, select_full,
+                                   calibration=calibration, calkey=calkey)
             break
         except ValueError as e:
             # Only a broken partition is fusion's fault (every chosen
@@ -687,31 +760,36 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
             eff = _substitute(specs, chosen)
     if fuse:
         STATS.fused_sites += len(chosen)
-        _FUSE_CACHE[specs] = eff
+        _FUSE_CACHE[(specs, calkey)] = eff
         if len(_FUSE_CACHE) > _SHARE_CACHE_MAX:
             _FUSE_CACHE.pop(next(iter(_FUSE_CACHE)))
     return plan
 
 
 def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                    select=None) -> NetworkPlan:
+                    select=None, calibration=None, calkey=None) -> NetworkPlan:
     # 1) Full-budget baseline: cost shares (raises "no feasible IP" for a
     #    site that cannot run even with everything — after descending its
     #    precision ladder, when it has one).
     if select is None:
-        select = lambda s: _select_site(s, budget)  # noqa: E731
+        select = lambda s: _select_site(s, budget, calibration)  # noqa: E731
+    if calkey is None:
+        calkey = calibration_key(calibration)
     base = [select(s) for s in specs]
-    costs = [fp.est_cycles / max(fp.outputs_per_pass, 1) for _, fp, _ in base]
+    costs = [_site_cost(ip, fp, bits, s, calibration)
+             for s, (ip, fp, bits) in zip(specs, base)]
     total_cost = sum(costs) or 1.0
     shares = tuple(c / total_cost for c in costs)
     # Memoize the shares for replan(): they shift a little across
     # budgets (the baseline winners may differ), but stay a sound
     # starting assignment — the repair pass recomputes exact needs
-    # under whatever budget replan() is handed.
-    if specs not in _SHARE_CACHE and len(_SHARE_CACHE) >= _SHARE_CACHE_MAX:
+    # under whatever budget replan() is handed.  Keyed on the
+    # calibration fingerprint too: a refitted table changes the shares.
+    if ((specs, calkey) not in _SHARE_CACHE
+            and len(_SHARE_CACHE) >= _SHARE_CACHE_MAX):
         _SHARE_CACHE.pop(next(iter(_SHARE_CACHE)))
-    _SHARE_CACHE[specs] = shares
-    return _assign_with_repair(specs, budget, shares)
+    _SHARE_CACHE[(specs, calkey)] = shares
+    return _assign_with_repair(specs, budget, shares, calibration)
 
 
 # ---------------------------------------------------------------------------
@@ -720,12 +798,15 @@ def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
 # ---------------------------------------------------------------------------
 def fixed_network_cost(specs: Iterable[SiteSpec],
                        members: Dict[str, str],
-                       budget: Optional[ResourceBudget] = None):
+                       budget: Optional[ResourceBudget] = None,
+                       calibration=None):
     """Total est-cycles of a fixed assignment, or None if any site is
     infeasible.  Each site is generously priced against the FULL budget
     (no partitioning) — the planner has to win despite that handicap.
 
     ``members`` maps family name -> member name (short or qualified).
+    ``calibration`` prices with measured scale factors when given, so the
+    baseline and the planner are compared under the same cost model.
     """
     budget = budget or ResourceBudget()
     total = 0.0
@@ -741,5 +822,5 @@ def fixed_network_cost(specs: Iterable[SiteSpec],
         fp = ip.footprint(*req.fp_args, **dict(req.fp_kwargs))
         if req.op_bits > fp.max_operand_bits or not fp.fits(budget):
             return None
-        total += fp.est_cycles / max(fp.outputs_per_pass, 1)
+        total += _site_cost(ip, fp, spec.native_bits, spec, calibration)
     return total

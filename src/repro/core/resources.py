@@ -93,6 +93,24 @@ class Footprint:
                                     # a fused conv->pool->act member is 1
                                     # where the unfused chain costs 3
 
+    @property
+    def compute_cycles(self) -> float:
+        """The compute half of the additive ``cost_cycles`` split:
+        ``est_cycles`` minus the DMA cycles its ``hbm_bytes`` price in
+        (clamped at zero for footprints priced under an older rule).
+        These are the two analytical axes the measurement-calibrated
+        cost model (``core/calibrate_cost.py``) regresses over."""
+        return max(self.est_cycles - hbm_cycles(self.hbm_bytes), 0.0)
+
+    def calibrated_cycles(self, calibration, member: str) -> float:
+        """This footprint's cost under a measurement-derived
+        ``CalibrationTable`` (cycle units; ``member`` is the calibration
+        key, see ``calibrate_cost.member_key``).  ``calibration=None``
+        is the identity: the analytical ``est_cycles``."""
+        if calibration is None:
+            return self.est_cycles
+        return calibration.calibrated_cycles(self, member)
+
     def fits(self, budget: ResourceBudget) -> bool:
         if self.vmem_bytes > budget.vmem_bytes:
             return False

@@ -49,13 +49,19 @@ class BudgetArbiter:
 
     def __init__(self, budget: Optional[ResourceBudget] = None, *,
                  policy: str = "demand", rebalance_threshold: float = 0.05,
-                 demand_alpha: float = 0.5):
+                 demand_alpha: float = 0.5, calibration=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
         if not 0.0 < demand_alpha <= 1.0:
             raise ValueError("demand_alpha must be in (0, 1]")
         self.budget = budget or ResourceBudget()
         self.policy = policy
+        # The unit the demand EWMA is denominated in: with a fitted
+        # CalibrationTable the server prices each tenant's unit cost in
+        # *calibrated* cycles, so grants track measured work, not the
+        # analytical estimate.  Kept here so ``calibration_key`` in
+        # telemetry names the model the grants were computed under.
+        self.calibration = calibration
         self.rebalance_threshold = rebalance_threshold
         self.demand_alpha = demand_alpha
         self._floors: Dict[str, float] = {}

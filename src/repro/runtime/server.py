@@ -11,7 +11,11 @@ through ``core.plan.replan`` — a tenant squeezed below its f32
 footprint degrades to int16/int8 execution instead of failing.
 
 Time model: latency is accounted in **estimated cycles**, the same cost
-model the planner optimizes.  Each tenant owns a serving lane (its
+model the planner optimizes.  With ``calibration=`` (a fitted
+``core.calibrate_cost.CalibrationTable``) both sides upgrade together:
+plans are ranked by measured scale factors and the lane clock advances
+by the same calibrated cycles, so grants, telemetry and the planner all
+optimize the objective that was actually measured.  Each tenant owns a serving lane (its
 spatial slice of the device, the FPGA-region analogy): batches of a
 lane execute sequentially, a batch occupies the lane for its plan's
 ``total_cycles``, and a request's latency is queue wait plus service.
@@ -89,16 +93,22 @@ class AdaptiveServer:
                  policy: str = "demand", rebalance_threshold: float = 0.05,
                  max_batch: int = 4, autotune: bool = False,
                  interpret: bool = True, demand_alpha: float = 0.5,
-                 fuse: bool = False):
+                 fuse: bool = False, calibration=None):
         self.budget = budget or ResourceBudget()
         # fuse=True serves every tenant through fusion-aware plans: a
         # block the planner can fuse runs conv->pool->act as ONE launch
         # (falling back per block when the fused footprint won't fit the
         # tenant's slice) — the hot-path est-cycles win of this PR.
         self.fuse = fuse
+        # calibration: a fitted CalibrationTable prices every planning
+        # decision, the demand weights, and the lane time model in
+        # measured scale factors instead of the raw analytical cycles
+        # (see core/calibrate_cost.py).  None keeps the analytical model.
+        self.calibration = calibration
         self.arbiter = BudgetArbiter(self.budget, policy=policy,
                                      rebalance_threshold=rebalance_threshold,
-                                     demand_alpha=demand_alpha)
+                                     demand_alpha=demand_alpha,
+                                     calibration=calibration)
         self.max_batch = max_batch
         self.autotune = autotune
         self.interpret = interpret
@@ -138,12 +148,14 @@ class AdaptiveServer:
         # unfused graph: fusion-aware planning always falls back to the
         # three-site chain, so the unfused minimum remains the sound
         # feasibility guarantee the arbiter must honor.
-        plan_network(canonical, self.budget, fuse=self.fuse)
+        plan_network(canonical, self.budget, fuse=self.fuse,
+                     calibration=self.calibration)
         floor = network_min_fraction(canonical, self.budget)
         unit = plan_network(
             self._specs(params, (1,) + input_shape, "float32",
                         pool_window, activation, ladder),
-            self.budget, fuse=self.fuse).total_cycles
+            self.budget, fuse=self.fuse,
+            calibration=self.calibration).calibrated_cycles(self.calibration)
         tenant = Tenant(name=name, params=params, input_shape=input_shape,
                         pool_window=tuple(pool_window), activation=activation,
                         ladder=tuple(ladder), measure_quant=measure_quant,
@@ -230,7 +242,8 @@ class AdaptiveServer:
                 self._specs_cache.pop(next(iter(self._specs_cache)))
             self._specs_cache[skey] = specs
         hits0, misses0 = STATS.plan_hits, STATS.plan_misses
-        plan = replan(specs, slice_budget, fuse=self.fuse)
+        plan = replan(specs, slice_budget, fuse=self.fuse,
+                      calibration=self.calibration)
         tile_overrides = None
         if self.autotune:
             tkey = (specs, slice_budget)
@@ -251,7 +264,7 @@ class AdaptiveServer:
                                tile_overrides=tile_overrides,
                                fuse=self.fuse)
         start = max(tenant.lane_free, max(r.arrival for r in batch))
-        finish = start + plan.total_cycles
+        finish = start + plan.calibrated_cycles(self.calibration)
         tenant.lane_free = finish
         latencies = [finish - r.arrival for r in batch]
         quant_err = 0.0
@@ -279,12 +292,17 @@ class AdaptiveServer:
     def telemetry(self) -> Dict[str, dict]:
         """Per-tenant snapshot: latency percentiles (est-cycles),
         batch occupancy, precision mix, re-plans, plan-cache hit rate,
-        measured quantization error, and the current grant/floor."""
+        measured quantization error, and the current grant/floor.
+        ``calibration_key`` identifies the cost model the plans and the
+        time accounting were priced under (None = analytical)."""
+        from repro.core.calibrate_cost import calibration_key
+        calkey = calibration_key(self.calibration)
         out = {}
         for name, t in self.tenants.items():
             snap = t.telemetry.snapshot()
             snap["granted_fraction"] = t.granted
             snap["floor_fraction"] = t.floor
             snap["unit_cost_cycles"] = t.unit_cost
+            snap["calibration_key"] = calkey
             out[name] = snap
         return out

@@ -1,0 +1,348 @@
+"""Measurement-calibrated cost model (core/calibrate_cost.py): fit
+recovery, fallback rules, persistence, monotonicity, and the planner
+integration that re-ranks members and fusion groups by measured cost.
+
+The fits here are synthetic (constructed samples with known ground
+truth) so every property is deterministic; the wall-clock end of the
+loop is exercised by ``benchmarks/run.py::table_calibration``.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.calibrate_cost import (CALIBRATION_SCHEMA_VERSION, AffineFit,
+                                       CalibrationTable, _affine_fit,
+                                       calibration_key, collect_plan_samples,
+                                       member_key, timeit_us)
+from repro.core.plan import clear_plan_cache, network_min_fraction, plan_network
+from repro.core.resources import CLOCK_HZ, Footprint, ResourceBudget, hbm_cycles
+from repro.models.blocks import cnn_block_site_specs
+
+
+def _fp(compute=1000.0, hbm=4096, vmem=1024):
+    """A footprint whose analytical axes are exactly (compute, hbm)."""
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=0,
+                     vpu_ops=100, est_cycles=compute + hbm_cycles(hbm))
+
+
+def _plane_samples(a, b, c, points):
+    """(compute, hbm, us) rows lying exactly on a known affine plane."""
+    return [(comp, hbm, a * comp + b * hbm + c) for comp, hbm in points]
+
+
+def _block_specs(site="cal"):
+    specs, _ = cnn_block_site_specs((2, 16, 16, 4), (3, 3, 4, 16),
+                                    x_dtype="float32", site=site)
+    return tuple(specs)
+
+
+def _const_fit(us):
+    """A fit predicting a constant wall-clock regardless of footprint."""
+    return AffineFit(us_per_compute_cycle=0.0, us_per_hbm_byte=0.0,
+                     overhead_us=float(us), n_samples=3)
+
+
+# --------------------------------------------------------------------------
+# Fit recovery: known scale factors reconstructed from synthetic samples
+# --------------------------------------------------------------------------
+def test_affine_fit_recovers_known_plane():
+    a, b, c = 2.5e-3, 4.0e-7, 12.0
+    rows = _plane_samples(a, b, c, [(100, 0), (500, 1 << 16),
+                                    (2000, 1 << 20), (4000, 1 << 14)])
+    fit = _affine_fit(rows)
+    assert fit.us_per_compute_cycle == pytest.approx(a, rel=1e-6)
+    assert fit.us_per_hbm_byte == pytest.approx(b, rel=1e-6)
+    assert fit.overhead_us == pytest.approx(c, rel=1e-6)
+    assert fit.n_samples == 4
+
+
+def test_affine_fit_clamps_coefficients_nonnegative():
+    # us DECREASES in hbm_bytes here; the unconstrained solve would go
+    # negative on that axis — the active-set clamp must zero it instead.
+    rows = [(100.0, 1 << 20, 50.0), (200.0, 1 << 16, 80.0),
+            (400.0, 1 << 10, 140.0), (800.0, 1 << 4, 260.0)]
+    fit = _affine_fit(rows)
+    assert fit.us_per_compute_cycle >= 0.0
+    assert fit.us_per_hbm_byte >= 0.0
+    assert fit.overhead_us >= 0.0
+
+
+def test_fit_recovery_through_table_records():
+    a, b, c = 1.5e-3, 2.0e-7, 5.0
+    table = CalibrationTable()
+    for comp, hbm in [(100, 1 << 12), (1000, 1 << 16), (5000, 1 << 18)]:
+        fp = _fp(compute=comp, hbm=hbm)
+        table.record("conv2d.ip1_vpu", fp, a * comp + b * hbm + c)
+    table.fit()
+    fp = _fp(compute=3000, hbm=1 << 15)
+    want = a * 3000 + b * (1 << 15) + c
+    assert table.predict_us("conv2d.ip1_vpu", fp.compute_cycles,
+                            fp.hbm_bytes) == pytest.approx(want, rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# <min_samples fallback
+# --------------------------------------------------------------------------
+def test_sparse_member_gets_no_dedicated_fit():
+    table = CalibrationTable()
+    table.record("conv2d.ip1_vpu", _fp(100), 10.0)
+    table.record("conv2d.ip1_vpu", _fp(200), 20.0)   # only 2 samples
+    table.record("pool2d.pool_vpu", _fp(100), 1.0)
+    table.record("pool2d.pool_vpu", _fp(200), 2.0)
+    table.record("pool2d.pool_vpu", _fp(300), 3.0)   # 3 samples
+    table.fit()
+    assert "conv2d.ip1_vpu" not in table.fits
+    assert "pool2d.pool_vpu" in table.fits
+    # the sparse member predicts through the GLOBAL fit over all samples
+    assert table.fit_for("conv2d.ip1_vpu") is table.global_fit
+    assert table.global_fit is not None
+    assert table.global_fit.n_samples == 5
+
+
+def test_min_samples_is_tunable():
+    table = CalibrationTable()
+    table.record("m.a", _fp(100), 10.0)
+    table.record("m.a", _fp(200), 20.0)
+    assert "m.a" not in table.fit().fits
+    assert "m.a" in table.fit(min_samples=2).fits
+
+
+def test_unseen_member_falls_back_to_global_then_identity():
+    table = CalibrationTable()
+    fp = _fp(1000)
+    # never fit at all: identity calibration
+    assert table.calibrated_cycles(fp, "conv2d.never_seen") == fp.est_cycles
+    table.record("m.a", _fp(100), 7.0)
+    table.fit()
+    # fit on any sample: unseen members price through the global fit
+    us = table.predict_us("conv2d.never_seen", fp.compute_cycles,
+                          fp.hbm_bytes)
+    assert us is not None
+    assert table.calibrated_cycles(fp, "conv2d.never_seen") \
+        == pytest.approx(us * 1e-6 * CLOCK_HZ)
+
+
+def test_empty_table_is_identity_everywhere():
+    table = CalibrationTable()
+    for fp in (_fp(10), _fp(1e6, hbm=1 << 24)):
+        assert table.calibrated_cycles(fp, "anything") == fp.est_cycles
+    assert table.fit_for("anything") is None
+
+
+# --------------------------------------------------------------------------
+# Monotonicity + nonnegativity (the properties the clamp buys)
+# --------------------------------------------------------------------------
+def test_calibrated_cost_nondecreasing_in_compute_and_hbm():
+    table = CalibrationTable()
+    for comp, hbm, us in [(100, 1 << 10, 5.0), (1000, 1 << 14, 30.0),
+                          (4000, 1 << 18, 150.0)]:
+        table.record("m.a", _fp(comp, hbm=hbm), us)
+    table.fit()
+    base = table.calibrated_cycles(_fp(500, hbm=1 << 12), "m.a")
+    assert table.calibrated_cycles(_fp(900, hbm=1 << 12), "m.a") >= base
+    assert table.calibrated_cycles(_fp(500, hbm=1 << 16), "m.a") >= base
+    assert base >= 0.0
+
+
+def test_predictions_clamped_nonnegative():
+    table = CalibrationTable(fits={"m.a": _const_fit(0.0)})
+    assert table.predict_us("m.a", 0.0, 0.0) == 0.0
+    assert table.calibrated_cycles(_fp(1), "m.a") == 0.0
+
+
+# --------------------------------------------------------------------------
+# member_key: lowered rungs are distinct members
+# --------------------------------------------------------------------------
+def test_member_key_suffixes_only_lowered_widths():
+    assert member_key("conv2d.ip1_vpu") == "conv2d.ip1_vpu"
+    assert member_key("conv2d.ip1_vpu", 32, 32) == "conv2d.ip1_vpu"
+    assert member_key("conv2d.ip1_vpu", 8, 32) == "conv2d.ip1_vpu@int8"
+    assert member_key("conv2d.ip1_vpu", 16, 32) == "conv2d.ip1_vpu@int16"
+
+
+def test_record_keys_lowered_variant_separately():
+    table = CalibrationTable()
+    table.record("conv2d.ip1_vpu", _fp(100), 10.0, bits=8, native_bits=32)
+    table.record("conv2d.ip1_vpu", _fp(100), 10.0, bits=32, native_bits=32)
+    assert table.sample_count("conv2d.ip1_vpu@int8") == 1
+    assert table.sample_count("conv2d.ip1_vpu") == 1
+
+
+# --------------------------------------------------------------------------
+# Persistence: versioned JSON, bit-exact round trip
+# --------------------------------------------------------------------------
+def _fitted_table():
+    table = CalibrationTable()
+    rng = np.random.default_rng(7)
+    for m in ("conv2d.ip1_vpu", "pool2d.pool_vpu", "cnn_fused.fused_vpu@int8"):
+        for _ in range(4):
+            comp = float(rng.uniform(50, 5000))
+            hbm = int(rng.integers(1 << 10, 1 << 20))
+            table.record(m, _fp(comp, hbm=hbm),
+                         float(0.001 * comp + 2e-7 * hbm + rng.uniform(1, 3)))
+    return table.fit()
+
+
+def test_json_round_trip_bit_exact():
+    table = _fitted_table()
+    text = table.to_json()
+    assert CalibrationTable.from_json(text).to_json() == text
+
+
+def test_save_load_round_trip_equality_and_identity(tmp_path):
+    table = _fitted_table()
+    path = tmp_path / "cal.json"
+    table.save(path)
+    loaded = CalibrationTable.load(path)
+    assert loaded == table
+    assert loaded.key() == table.key()
+    fp = _fp(777, hbm=1 << 13)
+    for m in ("conv2d.ip1_vpu", "cnn_fused.fused_vpu@int8", "unseen.m"):
+        assert loaded.calibrated_cycles(fp, m) \
+            == table.calibrated_cycles(fp, m)
+
+
+def test_unknown_schema_version_rejected():
+    d = json.loads(_fitted_table().to_json())
+    d["version"] = CALIBRATION_SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema version"):
+        CalibrationTable.from_json(json.dumps(d))
+    d["version"] = None
+    with pytest.raises(ValueError, match="schema version"):
+        CalibrationTable.from_json(json.dumps(d))
+
+
+# --------------------------------------------------------------------------
+# Identity: the cache-keying rule (fits move the key, samples do not)
+# --------------------------------------------------------------------------
+def test_recording_does_not_move_fingerprint_but_fit_does():
+    table = _fitted_table()
+    key0 = table.key()
+    table.record("conv2d.ip1_vpu", _fp(123), 99.0)
+    assert table.key() == key0          # predictions unchanged
+    table.fit()
+    assert table.key() != key0          # refit -> new identity
+
+
+def test_tables_with_identical_fits_share_identity():
+    t1, t2 = _fitted_table(), _fitted_table()
+    assert t1.key() == t2.key()
+    assert calibration_key(t1) == calibration_key(t2)
+    assert calibration_key(None) is None
+    assert t1.key()[0] == CALIBRATION_SCHEMA_VERSION
+
+
+# --------------------------------------------------------------------------
+# Timing substrate
+# --------------------------------------------------------------------------
+def test_timeit_us_calls_warmup_plus_repeat_and_is_positive():
+    calls = []
+    us = timeit_us(lambda: calls.append(1), warmup=2, repeat=5)
+    assert len(calls) == 7
+    assert us >= 0.0
+
+
+# --------------------------------------------------------------------------
+# Planner integration: calibration re-ranks, feasibility stays put
+# --------------------------------------------------------------------------
+def test_calibration_flips_fusion_choice():
+    specs = _block_specs("flip")
+    budget = ResourceBudget()
+    clear_plan_cache()
+    analytical = plan_network(specs, budget, fuse=True)
+    assert [s.spec.family for s in analytical.sites] == ["cnn_fused"]
+    # Measured verdict says the fused member is expensive: the SAME call
+    # must now plan the three-launch chain.
+    slow_fused = CalibrationTable(fits={"cnn_fused.fused_vpu": _const_fit(1e6)})
+    unfused = plan_network(specs, budget, fuse=True, calibration=slow_fused)
+    assert all(s.spec.family != "cnn_fused" for s in unfused.sites)
+    assert len(unfused.sites) == 3
+    # ...and a verdict agreeing with the analytical model keeps fusion
+    # (1e-3 us ~ 1 cycle, far below the chain's uncalibrated est-cycles).
+    fast_fused = CalibrationTable(
+        fits={"cnn_fused.fused_vpu": _const_fit(1e-3)})
+    fused = plan_network(specs, budget, fuse=True, calibration=fast_fused)
+    assert [s.spec.family for s in fused.sites] == ["cnn_fused"]
+
+
+def test_calibration_flips_member_ranking():
+    specs = _block_specs("rank")
+    budget = ResourceBudget()
+    clear_plan_cache()
+    base = plan_network(specs, budget)
+    conv_winner = next(s.ip.name for s in base.sites
+                       if s.spec.family == "conv2d")
+    # Price the analytical winner as measured-terrible; the planner must
+    # choose a different conv member for the same site.
+    table = CalibrationTable(fits={conv_winner: _const_fit(1e6)})
+    recal = plan_network(specs, budget, calibration=table)
+    new_winner = next(s.ip.name for s in recal.sites
+                      if s.spec.family == "conv2d")
+    assert new_winner != conv_winner
+
+
+def test_calibration_does_not_change_feasibility():
+    specs = _block_specs("feas")
+    table = CalibrationTable(fits={"cnn_fused.fused_vpu": _const_fit(1e6),
+                                   "conv2d.ip1_vpu": _const_fit(1e6)})
+    # the minimal feasible fraction is a fits() property — no calibration
+    # parameter exists on it, and the planned sites still fit their slices
+    budget = ResourceBudget()
+    assert network_min_fraction(specs, budget) == pytest.approx(
+        network_min_fraction(specs, budget))
+    plan = plan_network(specs, budget, calibration=table)
+    for s in plan.sites:
+        assert s.footprint.fits(budget.scaled(s.fraction))
+    # an infeasible deployment stays infeasible under any table
+    tiny = ResourceBudget(vmem_bytes=1024)
+    with pytest.raises(ValueError, match="no feasible IP"):
+        plan_network(specs, tiny)
+    with pytest.raises(ValueError, match="no feasible IP"):
+        plan_network(specs, tiny, calibration=table)
+
+
+def test_plan_calibrated_cycles_sums_per_site_predictions():
+    specs = _block_specs("sum")
+    clear_plan_cache()
+    plan = plan_network(specs, ResourceBudget())
+    table = _fitted_table()
+    want = sum(
+        table.calibrated_cycles(
+            s.footprint, member_key(s.ip.name, s.precision_bits,
+                                    s.spec.native_bits))
+        / max(s.footprint.outputs_per_pass, 1)
+        for s in plan.sites)
+    assert plan.calibrated_cycles(table) == pytest.approx(want)
+    assert plan.calibrated_cycles(None) == pytest.approx(plan.total_cycles)
+
+
+def test_footprint_calibrated_cycles_identity_and_table_paths():
+    fp = _fp(2000, hbm=1 << 16)
+    assert fp.calibrated_cycles(None, "m.a") == fp.est_cycles
+    table = CalibrationTable(fits={"m.a": _const_fit(10.0)})
+    assert fp.calibrated_cycles(table, "m.a") \
+        == pytest.approx(10.0 * 1e-6 * CLOCK_HZ)
+    assert fp.compute_cycles == pytest.approx(2000.0)
+
+
+# --------------------------------------------------------------------------
+# Sample collection against real plans (no wall-clock assertions)
+# --------------------------------------------------------------------------
+def test_collect_plan_samples_covers_distinct_sites_once():
+    specs = _block_specs("coll")
+    clear_plan_cache()
+    plan = plan_network(specs, ResourceBudget())
+    table = collect_plan_samples([plan, plan, None], warmup=0, repeat=1)
+    assert table.sample_count() == len(plan.sites)
+    members = {s.member for s in table.samples}
+    assert members == {member_key(s.ip.name, s.precision_bits,
+                                  s.spec.native_bits) for s in plan.sites}
+    # the recorded axes are exactly the footprints' analytical split
+    by_member = {s.member: s for s in table.samples}
+    for s in plan.sites:
+        rec = by_member[member_key(s.ip.name, s.precision_bits,
+                                   s.spec.native_bits)]
+        assert rec.compute_cycles == pytest.approx(s.footprint.compute_cycles)
+        assert rec.hbm_bytes == s.footprint.hbm_bytes
+        assert rec.measured_us > 0.0

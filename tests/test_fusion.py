@@ -354,15 +354,21 @@ def _load_bench():
     return mod
 
 
-def test_table_fusion_fused_wins_and_stays_in_bounds():
+def test_table_fusion_reports_modeled_and_measured_separately():
     bench = _load_bench()
     bench.table_fusion()
     rows = [d for n, _, d in bench.ROWS if n.startswith("table_fusion.")]
     assert rows
     both = [d for d in rows if "unfused=x" not in d and "fused=x" not in d]
-    # strictly lower est-cycles on >= 2 budgets, never worse anywhere
-    assert sum("fused_wins=1" in d for d in both) >= 2, both
-    assert all("never_worse=1" in d for d in both), both
+    # The analytical model prices fused strictly cheaper on >= 2 budgets
+    # (the counted DMA-byte saving) — a claim about the MODEL only.
+    assert sum("modeled_wins=1" in d for d in both) >= 2, both
+    # The measured verdict must be reported as its OWN flag on every
+    # row (never asserted to equal the modeled one: the two disagreeing
+    # is real data — it is why the calibration layer exists).
+    for d in both:
+        assert "measured_wins=" in d, d
+        assert "never_worse" not in d and "fused_wins" not in d, d
     # launch count 3 -> 1 per block, errors within the deployment bound
     for d in both:
         assert "launches_unfused=9" in d and "launches_fused=3" in d, d

@@ -288,3 +288,94 @@ def test_fixed_network_cost_infeasible_is_none():
         specs, {"conv2d": "ip1_vpu", "pool2d": "pool_vpu",
                 "activation": "act_vpu"}, ResourceBudget())
     assert cost is not None and cost > 0
+
+
+# --------------------------------------------------------------------------
+# Cache correctness under calibration: a refreshed table must invalidate
+# stale plans and stale replan shares (core/calibrate_cost.py)
+# --------------------------------------------------------------------------
+def _refit(table, plan):
+    """Record 3 synthetic samples against a planned site and refit —
+    the minimal operation that moves the table's identity."""
+    site = plan.sites[0]
+    for us in (10.0, 20.0, 30.0):
+        table.record(site.ip.name, site.footprint, us,
+                     bits=site.precision_bits,
+                     native_bits=site.spec.native_bits)
+    return table.fit()
+
+
+def test_plan_cache_keys_on_calibration_identity():
+    from repro.core.calibrate_cost import CalibrationTable
+    specs = tuple(_cnn_specs("calkey"))
+    budget = ResourceBudget()
+    clear_plan_cache()
+    table = CalibrationTable()
+    stats = planner_stats()
+    misses0 = stats.plan_misses
+    p1 = plan_network(specs, budget, calibration=table)
+    assert stats.plan_misses == misses0 + 1
+    # identical table identity -> cache hit, same object
+    hits0 = stats.plan_hits
+    assert plan_network(specs, budget, calibration=table) is p1
+    assert stats.plan_hits == hits0 + 1
+    # refitting moves key(): the same call must MISS (no stale plan)
+    key0 = table.key()
+    _refit(table, p1)
+    assert table.key() != key0
+    misses1 = stats.plan_misses
+    plan_network(specs, budget, calibration=table)
+    assert stats.plan_misses == misses1 + 1
+
+
+def test_calibrated_and_uncalibrated_plans_cached_separately():
+    from repro.core import plan as plan_mod
+    from repro.core.calibrate_cost import CalibrationTable
+    specs = tuple(_cnn_specs("calsep"))
+    budget = ResourceBudget()
+    clear_plan_cache()
+    plan_network(specs, budget)
+    plan_network(specs, budget, calibration=CalibrationTable())
+    keys = [k for k in plan_mod._PLAN_CACHE if k[0] == specs]
+    assert len(keys) == 2
+    assert {k[3] for k in keys} == {None,
+                                    CalibrationTable().key()}
+
+
+def test_replan_shares_keyed_on_calibration_identity():
+    from repro.core.calibrate_cost import CalibrationTable
+    from repro.core.plan import replan
+    specs = tuple(_cnn_specs("calshare"))
+    table = CalibrationTable()
+    clear_plan_cache()
+    stats = planner_stats()
+    warm = replan(specs, ResourceBudget(), calibration=table)  # warms shares
+    fast0 = stats.replan_fast
+    replan(specs, ResourceBudget(vmem_bytes=2 * 2**20), calibration=table)
+    assert stats.replan_fast == fast0 + 1
+    # a REFIT table must not serve off the stale shares: same graph,
+    # same budget shape, but the share lookup misses and falls cold
+    _refit(table, warm)
+    cold0 = stats.replan_cold
+    replan(specs, ResourceBudget(vmem_bytes=3 * 2**20), calibration=table)
+    assert stats.replan_cold == cold0 + 1
+
+
+def test_replan_strict_agrees_with_cold_calibrated_plan():
+    from repro.core import plan as plan_mod
+    from repro.core.calibrate_cost import AffineFit, CalibrationTable
+    from repro.core.plan import replan
+    specs = tuple(_cnn_specs("calstrict"))
+    budget = ResourceBudget(vmem_bytes=4 * 2**20)
+    clear_plan_cache()
+    # a table that actually changes decisions: the analytical conv
+    # winner is priced as measured-terrible
+    base = plan_network(specs, ResourceBudget())
+    conv_winner = next(s.ip.name for s in base.sites
+                       if s.spec.family == "conv2d")
+    table = CalibrationTable(
+        fits={conv_winner: AffineFit(0.0, 0.0, 1e6, 3)})
+    got = replan(specs, budget, strict=True, calibration=table)
+    cold = plan_mod._plan_uncached(specs, budget, calibration=table)
+    assert plan_mod._assignment(got) == plan_mod._assignment(cold)
+    assert all(s.ip.name != conv_winner for s in got.sites)

@@ -1,0 +1,142 @@
+"""Property tests for the cost primitives in ``core/resources.py`` —
+the substrate the measurement-calibrated cost model regresses over
+(``core/calibrate_cost.py`` fits an affine model of
+``Footprint.compute_cycles`` and ``hbm_bytes``, so the additive split
+and the budget algebra below are load-bearing).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback shim (``tests/_hypothesis_fallback.py`` via ``conftest.py``).
+"""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.resources import (Footprint, ResourceBudget, cost_cycles,
+                                  hbm_cycles)
+
+_COMPUTE = st.floats(min_value=0.0, max_value=1e9)
+_BYTES = st.integers(min_value=0, max_value=1 << 30)
+_FRACTION = st.floats(min_value=0.01, max_value=1.0)
+
+
+def _fp(compute, hbm, *, vmem=4096, mxu=0, vpu=100, bits=32):
+    return Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=mxu,
+                     vpu_ops=vpu, est_cycles=cost_cycles(compute, hbm),
+                     max_operand_bits=bits)
+
+
+# --------------------------------------------------------------------------
+# cost_cycles: the additive compute+DMA rule
+# --------------------------------------------------------------------------
+@settings(max_examples=50)
+@given(c1=_COMPUTE, c2=_COMPUTE, b1=_BYTES, b2=_BYTES)
+def test_cost_cycles_additive_in_both_axes(c1, c2, b1, b2):
+    # splitting a launch's compute and traffic across two launches costs
+    # exactly the same total — no cross-term, no overlap discount
+    assert cost_cycles(c1 + c2, 0) + cost_cycles(0, b1 + b2) \
+        == pytest.approx(cost_cycles(c1, b1) + cost_cycles(c2, b2))
+
+
+@settings(max_examples=50)
+@given(c=_COMPUTE, b=_BYTES, dc=_COMPUTE, db=_BYTES)
+def test_cost_cycles_monotone_and_bounded_below(c, b, dc, db):
+    base = cost_cycles(c, b)
+    assert cost_cycles(c + dc, b) >= base
+    assert cost_cycles(c, b + db) >= base
+    # never below either constituent: the serial model's floor
+    assert base >= c and base >= hbm_cycles(b)
+    assert cost_cycles(0.0, 0) == 0.0
+
+
+@settings(max_examples=50)
+@given(c=_COMPUTE, b=_BYTES)
+def test_compute_cycles_inverts_the_additive_split(c, b):
+    # the calibration axes recover the compute half exactly from
+    # est_cycles priced under the shared rule
+    assert _fp(c, b).compute_cycles == pytest.approx(c, abs=1e-6 * (1 + c))
+
+
+# --------------------------------------------------------------------------
+# Footprint.fits: monotone in the budget
+# --------------------------------------------------------------------------
+@settings(max_examples=50)
+@given(vmem=st.integers(min_value=1, max_value=1 << 24),
+       hbm=st.integers(min_value=1, max_value=1 << 24),
+       passes=st.integers(min_value=0, max_value=64),
+       vpu=st.integers(min_value=0, max_value=1 << 20),
+       grow=st.integers(min_value=0, max_value=1 << 20))
+def test_fits_monotone_in_budget(vmem, hbm, passes, vpu, grow):
+    fp = Footprint(vmem_bytes=vmem, hbm_bytes=hbm, mxu_passes=passes,
+                   vpu_ops=vpu, est_cycles=1.0)
+    tight = ResourceBudget(vmem_bytes=vmem, hbm_bytes=hbm,
+                           mxu_passes_budget=passes or None,
+                           vpu_ops_budget=max(vpu, 1),
+                           precision_bits=8)
+    assert fp.fits(tight)
+    # enlarging ANY quantitative column (or lifting a ceiling to
+    # unlimited) never turns a fitting footprint into a misfit
+    wider = [dataclasses.replace(tight, vmem_bytes=tight.vmem_bytes + grow),
+             dataclasses.replace(tight, hbm_bytes=tight.hbm_bytes + grow),
+             dataclasses.replace(tight, mxu_passes_budget=None),
+             dataclasses.replace(tight, vpu_ops_budget=None)]
+    for budget in wider:
+        assert fp.fits(budget)
+    # and shrinking below the footprint always rejects
+    assert not fp.fits(dataclasses.replace(tight, vmem_bytes=vmem - 1))
+    assert not fp.fits(dataclasses.replace(tight, hbm_bytes=hbm - 1))
+
+
+@settings(max_examples=30)
+@given(bits=st.sampled_from([8, 16, 32]),
+       need=st.sampled_from([8, 16, 32]))
+def test_fits_respects_operand_width_ceiling(bits, need):
+    fp = _fp(10.0, 0, bits=bits)
+    assert fp.fits(ResourceBudget(precision_bits=need)) == (need <= bits)
+
+
+# --------------------------------------------------------------------------
+# scaled(): round-trip bounds
+# --------------------------------------------------------------------------
+@settings(max_examples=50)
+@given(f=_FRACTION,
+       vmem=st.integers(min_value=1024, max_value=1 << 30),
+       passes=st.integers(min_value=1, max_value=1 << 16),
+       vpu=st.integers(min_value=1, max_value=1 << 24))
+def test_scaled_shrinks_quantitative_columns_within_bounds(f, vmem, passes,
+                                                           vpu):
+    b = ResourceBudget(vmem_bytes=vmem, mxu_passes_budget=passes,
+                       vpu_ops_budget=vpu)
+    s = b.scaled(f)
+    # every quantitative column lands in [floor(v*f) bounds]: never
+    # negative, never above the original, exact int truncation
+    for got, orig in ((s.vmem_bytes, vmem), (s.hbm_bytes, b.hbm_bytes),
+                      (s.mxu_passes_budget, passes),
+                      (s.vpu_ops_budget, vpu)):
+        assert 0 <= got <= orig
+        assert got == int(orig * f)
+    # qualitative knobs pass through untouched
+    assert s.mxu_available == b.mxu_available
+    assert s.precision_bits == b.precision_bits
+    assert s.prefer_parallel_streams == b.prefer_parallel_streams
+
+
+@settings(max_examples=50)
+@given(f=_FRACTION, vmem=st.integers(min_value=1024, max_value=1 << 30))
+def test_scaled_round_trip_bounded_by_truncation(f, vmem):
+    # scaling down then back up cannot exceed the original (int
+    # truncation only loses), and loses less than 1/f per column
+    s = ResourceBudget(vmem_bytes=vmem).scaled(f)
+    back = s.scaled(1.0 / f)
+    assert back.vmem_bytes <= vmem + 1   # +1: 1/f itself truncates
+    assert vmem - back.vmem_bytes <= 1.0 / f + 1
+    # full-budget identity: scaled(1.0) is exact on every int column
+    one = ResourceBudget(vmem_bytes=vmem).scaled(1.0)
+    assert one.vmem_bytes == vmem
+
+
+@settings(max_examples=30)
+@given(f=_FRACTION)
+def test_scaled_none_ceilings_stay_none(f):
+    s = ResourceBudget().scaled(f)
+    assert s.mxu_passes_budget is None and s.vpu_ops_budget is None

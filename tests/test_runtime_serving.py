@@ -376,3 +376,47 @@ def test_server_counts_replans_on_grant_moves(rng):
     tel = srv.telemetry()
     assert srv.arbiter.rebalances >= 1
     assert tel["a"]["replans"] + tel["b"]["replans"] >= 1
+
+
+# --------------------------------------------------------------------------
+# Calibration: the server plans, prices demand, and accounts lane time
+# under a measurement-derived CalibrationTable (core/calibrate_cost.py)
+# --------------------------------------------------------------------------
+def test_server_prices_and_accounts_under_calibration(rng):
+    from repro.core.calibrate_cost import AffineFit, CalibrationTable
+    clear_plan_cache()
+    params = _frontend()
+    x = rng.normal(size=(12, 12, 6)).astype(np.float32)
+    # a table covering EVERY member via the global fallback: each launch
+    # predicts a constant 100us -> 9.4e4 cycles, wildly different from
+    # the analytical est-cycles, so calibrated accounting is observable
+    table = CalibrationTable(
+        global_fit=AffineFit(us_per_compute_cycle=0.0, us_per_hbm_byte=0.0,
+                             overhead_us=100.0, n_samples=3))
+    results = {}
+    for cal in (None, table):
+        clear_plan_cache()
+        srv = AdaptiveServer(ResourceBudget(), policy="static", max_batch=2,
+                             calibration=cal)
+        srv.register("t", params, (12, 12, 6))
+        srv.submit("t", x)
+        (c,) = srv.drain()
+        results[cal is not None] = (srv, c)
+    srv_cal, done = results[True]
+    srv_raw, raw = results[False]
+    # numerics are calibration-independent — only cost accounting moves
+    np.testing.assert_array_equal(np.asarray(done.result),
+                                  np.asarray(raw.result))
+    assert done.latency != raw.latency
+    tel = srv_cal.telemetry()["t"]
+    assert tel["calibration_key"] == table.key()
+    assert srv_raw.telemetry()["t"]["calibration_key"] is None
+    # unit cost (the arbiter's demand weight) is the calibrated price
+    tenant = srv_cal.tenants["t"]
+    specs = srv_cal._specs(params, (1, 12, 12, 6), "float32", (2, 2),
+                           "relu", ())
+    want = plan_network(specs, srv_cal.budget,
+                        calibration=table).calibrated_cycles(table)
+    assert tenant.unit_cost == pytest.approx(want)
+    # the arbiter knows which cost model its grants are denominated in
+    assert srv_cal.arbiter.calibration is table
