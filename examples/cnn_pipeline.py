@@ -72,8 +72,11 @@ def stack_site_specs(img_shape):
 
 
 def run_stack(img, weights, budget):
-    """conv -> maxpool -> relu -> requant per layer, from one plan."""
-    plan = plan_network(stack_site_specs(img.shape), budget)
+    """conv -> maxpool -> relu -> requant per layer, from one plan.
+    fuse=False: this part drives each op kernel by hand (with its own
+    requantize between them), so it needs the per-op sites the fused
+    default would collapse."""
+    plan = plan_network(stack_site_specs(img.shape), budget, fuse=False)
     x = img
     for li, w in enumerate(weights):
         x = conv2d(x, w, ip=plan[f"layer{li}.conv"][0].name)
@@ -107,10 +110,11 @@ def main():
 
     # --- plan cache + JSON artifacts ------------------------------------
     evals_before = planner_stats().selector_evals
-    replanned = plan_network(stack_site_specs(img.shape), BUDGETS["ample"])
+    replanned = plan_network(stack_site_specs(img.shape), BUDGETS["ample"],
+                             fuse=False)
     assert planner_stats().selector_evals == evals_before
     assert replanned is plan_network(stack_site_specs(img.shape),
-                                     BUDGETS["ample"])
+                                     BUDGETS["ample"], fuse=False)
     roundtrip = NetworkPlan.from_json(replanned.to_json())
     assert roundtrip == replanned
     print("plan cache hit (zero new selector evals) + JSON round-trip. ✓")
@@ -142,7 +146,9 @@ def main():
     block = init_cnn_block(jax.random.PRNGKey(0), cin=8, cout=16, k=3)
     xs = jnp.asarray(rng.normal(size=(2, 16, 16, 8)).astype(np.float32))
     y_f32 = apply_cnn_block(block, xs, activation="relu")
-    tight = ResourceBudget(vmem_bytes=30 * 1024)
+    # 24 KiB: too tight for the f32 fused block (the planner fuses by
+    # default), loose enough for its int16 rung.
+    tight = ResourceBudget(vmem_bytes=24 * 1024)
     try:
         apply_cnn_block(block, xs, budget=tight, activation="relu")
         raise AssertionError("expected the f32-only block to be infeasible")

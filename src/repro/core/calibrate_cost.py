@@ -57,7 +57,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.resources import CLOCK_HZ, Footprint
 
-CALIBRATION_SCHEMA_VERSION = 1
+# v2 adds the collective axis (``comm_cycles`` on samples,
+# ``us_per_comm_cycle`` on fits) for mesh-sharded sites; v1 tables load
+# with the new axis defaulted to zero — their predictions are unchanged.
+CALIBRATION_SCHEMA_VERSION = 2
+_ACCEPTED_SCHEMA_VERSIONS = (1, 2)
 
 # Defaults for the measurement harness: one discarded warmup call, then
 # the median of this many timed calls (matches benchmarks/run.py).
@@ -103,6 +107,7 @@ class CalibrationSample:
     compute_cycles: float
     hbm_bytes: float
     measured_us: float
+    comm_cycles: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -112,24 +117,31 @@ class CalibrationSample:
         return cls(family=d["family"], member=d["member"],
                    compute_cycles=float(d["compute_cycles"]),
                    hbm_bytes=float(d["hbm_bytes"]),
-                   measured_us=float(d["measured_us"]))
+                   measured_us=float(d["measured_us"]),
+                   comm_cycles=float(d.get("comm_cycles", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)
 class AffineFit:
     """``predicted_us = us_per_compute_cycle * compute
-    + us_per_hbm_byte * hbm_bytes + overhead_us`` with every coefficient
-    >= 0 (enforced at fit time), so predictions are nonnegative and
-    nondecreasing in both axes."""
+    + us_per_hbm_byte * hbm_bytes + us_per_comm_cycle * comm
+    + overhead_us`` with every coefficient >= 0 (enforced at fit time),
+    so predictions are nonnegative and nondecreasing in every axis.
+    ``us_per_comm_cycle`` calibrates collective traffic exactly like
+    compute and HBM; tables fit before the mesh work (schema v1) carry
+    an implicit zero."""
 
     us_per_compute_cycle: float
     us_per_hbm_byte: float
     overhead_us: float
     n_samples: int
+    us_per_comm_cycle: float = 0.0
 
-    def predict_us(self, compute_cycles: float, hbm_bytes: float) -> float:
+    def predict_us(self, compute_cycles: float, hbm_bytes: float,
+                   comm_cycles: float = 0.0) -> float:
         return (self.us_per_compute_cycle * compute_cycles
-                + self.us_per_hbm_byte * hbm_bytes + self.overhead_us)
+                + self.us_per_hbm_byte * hbm_bytes
+                + self.us_per_comm_cycle * comm_cycles + self.overhead_us)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -139,19 +151,24 @@ class AffineFit:
         return cls(us_per_compute_cycle=float(d["us_per_compute_cycle"]),
                    us_per_hbm_byte=float(d["us_per_hbm_byte"]),
                    overhead_us=float(d["overhead_us"]),
-                   n_samples=int(d["n_samples"]))
+                   n_samples=int(d["n_samples"]),
+                   us_per_comm_cycle=float(d.get("us_per_comm_cycle", 0.0)))
 
 
-def _affine_fit(rows: Sequence[Tuple[float, float, float]]) -> AffineFit:
-    """Least-squares affine fit of (compute, hbm) -> us with coefficients
-    clamped nonnegative: solve, drop the most negative coefficient's
-    column, re-solve — a small active-set NNLS sufficient for 3 columns.
+def _affine_fit(
+        rows: Sequence[Tuple[float, float, float, float]]) -> AffineFit:
+    """Least-squares affine fit of (compute, hbm, comm) -> us with
+    coefficients clamped nonnegative: solve, drop the most negative
+    coefficient's column, re-solve — a small active-set NNLS sufficient
+    for 4 columns.  (An all-zero comm column — every single-device
+    sample — is rank-deficient; lstsq's min-norm solution leaves its
+    coefficient at zero, the correct no-information answer.)
     """
     import numpy as np
-    X = np.array([[c, h, 1.0] for c, h, _ in rows], dtype=np.float64)
-    y = np.array([us for _, _, us in rows], dtype=np.float64)
-    active = [0, 1, 2]
-    coef = np.zeros(3)
+    X = np.array([[c, h, m, 1.0] for c, h, m, _ in rows], dtype=np.float64)
+    y = np.array([us for _, _, _, us in rows], dtype=np.float64)
+    active = [0, 1, 2, 3]
+    coef = np.zeros(4)
     while active:
         sol, *_ = np.linalg.lstsq(X[:, active], y, rcond=None)
         if all(s >= 0.0 for s in sol):
@@ -162,7 +179,8 @@ def _affine_fit(rows: Sequence[Tuple[float, float, float]]) -> AffineFit:
         active.pop(worst)
     return AffineFit(us_per_compute_cycle=float(coef[0]),
                      us_per_hbm_byte=float(coef[1]),
-                     overhead_us=float(coef[2]), n_samples=len(rows))
+                     us_per_comm_cycle=float(coef[2]),
+                     overhead_us=float(coef[3]), n_samples=len(rows))
 
 
 class CalibrationTable:
@@ -200,7 +218,8 @@ class CalibrationTable:
             member=key,
             compute_cycles=float(footprint.compute_cycles),
             hbm_bytes=float(footprint.hbm_bytes),
-            measured_us=float(measured_us)))
+            measured_us=float(measured_us),
+            comm_cycles=float(footprint.comm_cycles)))
 
     def sample_count(self, member: Optional[str] = None) -> int:
         if member is None:
@@ -215,13 +234,15 @@ class CalibrationTable:
         """
         if min_samples is not None:
             self.min_samples = int(min_samples)
-        by_member: Dict[str, List[Tuple[float, float, float]]] = {}
+        by_member: Dict[str, List[Tuple[float, float, float, float]]] = {}
         for s in self.samples:
             by_member.setdefault(s.member, []).append(
-                (s.compute_cycles, s.hbm_bytes, s.measured_us))
+                (s.compute_cycles, s.hbm_bytes, s.comm_cycles,
+                 s.measured_us))
         self.fits = {m: _affine_fit(rows) for m, rows in by_member.items()
                      if len(rows) >= self.min_samples}
-        all_rows = [(s.compute_cycles, s.hbm_bytes, s.measured_us)
+        all_rows = [(s.compute_cycles, s.hbm_bytes, s.comm_cycles,
+                     s.measured_us)
                     for s in self.samples]
         self.global_fit = _affine_fit(all_rows) if all_rows else None
         self._fingerprint = None
@@ -235,22 +256,34 @@ class CalibrationTable:
         return self.fits.get(member, self.global_fit)
 
     def predict_us(self, member: str, compute_cycles: float,
-                   hbm_bytes: float) -> Optional[float]:
+                   hbm_bytes: float,
+                   comm_cycles: float = 0.0) -> Optional[float]:
         f = self.fit_for(member)
         if f is None:
             return None
-        return max(f.predict_us(compute_cycles, hbm_bytes), 0.0)
+        return max(f.predict_us(compute_cycles, hbm_bytes, comm_cycles),
+                   0.0)
 
     def calibrated_cycles(self, footprint: Footprint, member: str) -> float:
         """The footprint's cost under this table, in cycle units: the
         predicted wall-clock scaled by the core clock, so calibrated
         costs rank against each other exactly as the measurements do.
-        Falls back to ``est_cycles`` when no fit covers the member."""
+        Falls back to ``est_cycles`` when no fit covers the member.
+
+        A member with no fitted comm coefficient (all its samples were
+        single-device) still pays its ``comm_cycles`` at the analytical
+        rate — collective traffic never becomes free just because it
+        was not measured yet."""
         us = self.predict_us(member, footprint.compute_cycles,
-                             footprint.hbm_bytes)
+                             footprint.hbm_bytes, footprint.comm_cycles)
         if us is None:
             return footprint.est_cycles
-        return us * 1e-6 * CLOCK_HZ
+        cycles = us * 1e-6 * CLOCK_HZ
+        f = self.fit_for(member)
+        if footprint.comm_cycles and f is not None \
+                and f.us_per_comm_cycle == 0.0:
+            cycles += footprint.comm_cycles
+        return cycles
 
     # -- identity -----------------------------------------------------------
     def fingerprint(self) -> str:
@@ -287,10 +320,10 @@ class CalibrationTable:
     def from_json(cls, text: str) -> "CalibrationTable":
         d = json.loads(text)
         version = d.get("version")
-        if version != CALIBRATION_SCHEMA_VERSION:
+        if version not in _ACCEPTED_SCHEMA_VERSIONS:
             raise ValueError(
                 f"calibration table schema version {version!r} is not "
-                f"supported (expected {CALIBRATION_SCHEMA_VERSION}); "
+                f"supported (accepted {_ACCEPTED_SCHEMA_VERSIONS}); "
                 "re-collect samples and refit")
         return cls(
             samples=[CalibrationSample.from_dict(s) for s in d["samples"]],
@@ -430,6 +463,11 @@ def collect_plan_samples(plans, table: Optional[CalibrationTable] = None, *,
     the affine fit needs), while re-planning the same site under another
     budget does not re-measure.  Returns the (new or given) table;
     call ``fit()`` on it when sampling is done.
+
+    Sharded sites are skipped: their footprint is the per-device shard
+    plus collective cycles, which a standalone single-process runner
+    cannot reproduce — the comm axis is calibrated from whole-plan mesh
+    measurements (``benchmarks/run.py::table_mesh``) instead.
     """
     table = table if table is not None else CalibrationTable()
     seen = set()
@@ -437,6 +475,8 @@ def collect_plan_samples(plans, table: Optional[CalibrationTable] = None, *,
         if plan is None:
             continue
         for site in plan.sites:
+            if getattr(site, "shard_degree", 1) > 1:
+                continue
             dkey = (site.ip.name, site.precision_bits, site.spec)
             if dkey in seen:
                 continue

@@ -69,7 +69,7 @@ from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 
 from repro.core.calibrate_cost import calibration_key, member_key
 from repro.core.ip import IPFamily, KernelIP, SiteSpec
-from repro.core.resources import Footprint, ResourceBudget
+from repro.core.resources import Footprint, MeshSpec, ResourceBudget
 
 _PLAN_CACHE_MAX = 1024
 _SHARE_CACHE_MAX = 1024
@@ -288,19 +288,33 @@ def select_ip(family: Union[str, IPFamily], spec: SiteSpec,
 @dataclasses.dataclass(frozen=True)
 class PlannedSite:
     """One site's resolved decision: the member, its price, the fraction
-    of the network budget the partitioner granted it, and the operand
+    of the network budget the partitioner granted it, the operand
     width the precision ladder settled on (== the spec's native width
-    when no lowering was needed)."""
+    when no lowering was needed), and the sharding the mesh pass chose
+    (``shard_axis``/``shard_degree``; degree 1 means replicated).
+
+    ``spec`` stays the GLOBAL site — what the caller's shapes validate
+    against; the per-device shard is recoverable via
+    ``NetworkPlan.device_plan()``.  A sharded site's ``footprint`` is
+    its per-device footprint with the collective traffic folded in:
+    ``comm_cycles`` carries the collective term and ``est_cycles``
+    already includes it (docs/adaptive_ips.md, "Sharding contract")."""
 
     spec: SiteSpec
     ip: KernelIP
     footprint: Footprint
     fraction: float
     precision_bits: int = 32
+    shard_axis: str = "none"
+    shard_degree: int = 1
 
     @property
     def lowered(self) -> bool:
         return self.precision_bits < self.spec.native_bits
+
+    @property
+    def sharded(self) -> bool:
+        return self.shard_degree > 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,6 +328,11 @@ class NetworkPlan:
 
     budget: ResourceBudget
     sites: Tuple[PlannedSite, ...]
+    # The mesh this plan was priced against (None = single device, the
+    # pre-mesh behavior).  A plan with mesh devices > 1 may carry
+    # sharded sites; execution routes them through shard_map
+    # (distributed/shard_exec.py).
+    mesh: Optional[MeshSpec] = None
 
     def site(self, name: str) -> PlannedSite:
         for s in self.sites:
@@ -367,18 +386,40 @@ class NetworkPlan:
         """Sites the precision ladder actually lowered below native."""
         return tuple(s for s in self.sites if s.lowered)
 
+    def sharded_sites(self) -> Tuple[PlannedSite, ...]:
+        """Sites the mesh pass actually split past one device."""
+        return tuple(s for s in self.sites if s.sharded)
+
+    def device_plan(self) -> "NetworkPlan":
+        """The per-device view of a sharded plan: each sharded site's
+        GLOBAL spec replaced by its per-device shard — the shapes
+        execution actually sees inside ``shard_map``, and what the
+        apply-path plan/site validation must match against.  A plan
+        with no sharded sites returns itself."""
+        if not any(s.sharded for s in self.sites):
+            return self
+        from repro.core.shard import shard_site_spec
+        sites = tuple(
+            dataclasses.replace(s, spec=shard_site_spec(
+                s.spec, s.shard_axis, s.shard_degree))
+            if s.sharded else s
+            for s in self.sites)
+        return dataclasses.replace(self, sites=sites)
+
     def describe(self) -> str:
         lines = []
         for s in self.sites:
             fp = s.footprint
             prec = (f"int{s.precision_bits}*" if s.lowered
                     else f"{s.precision_bits}b")
+            shard = (f" {s.shard_axis}x{s.shard_degree}"
+                     if s.sharded else "")
             lines.append(
                 f"{s.spec.name:<40s} -> {s.ip.name:<28s} "
                 f"p={prec:<6s} frac={s.fraction:5.3f} "
                 f"vmem={fp.vmem_bytes/2**20:7.2f}MiB "
                 f"mxu={fp.mxu_passes:<8d} vpu={fp.vpu_ops:.2e} "
-                f"cyc={fp.est_cycles:.3e}")
+                f"cyc={fp.est_cycles:.3e}{shard}")
         lines.append(f"{'TOTAL':<40s}    {'':<28s} "
                      f"cyc={self.total_cycles:.3e}")
         return "\n".join(lines)
@@ -387,11 +428,15 @@ class NetworkPlan:
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps({
             "budget": dataclasses.asdict(self.budget),
+            "mesh": (dataclasses.asdict(self.mesh)
+                     if self.mesh is not None else None),
             "sites": [{
                 "spec": s.spec.to_dict(),
                 "ip": s.ip.name,
                 "fraction": s.fraction,
                 "precision_bits": s.precision_bits,
+                "shard_axis": s.shard_axis,
+                "shard_degree": s.shard_degree,
                 "footprint": dataclasses.asdict(s.footprint),
             } for s in self.sites],
         }, indent=indent)
@@ -409,9 +454,14 @@ class NetworkPlan:
                 fraction=float(r["fraction"]),
                 precision_bits=int(r.get("precision_bits",
                                          spec.native_bits)),
+                shard_axis=r.get("shard_axis", "none"),
+                shard_degree=int(r.get("shard_degree", 1)),
                 footprint=Footprint(**r["footprint"]),
             ))
-        return cls(budget=ResourceBudget(**d["budget"]), sites=tuple(sites))
+        mesh = d.get("mesh")
+        return cls(budget=ResourceBudget(**d["budget"]),
+                   sites=tuple(sites),
+                   mesh=MeshSpec(**mesh) if mesh else None)
 
 
 # ---------------------------------------------------------------------------
@@ -457,7 +507,8 @@ def _site_need(spec: SiteSpec, budget: ResourceBudget) -> float:
 
 def plan_network(specs: Iterable[SiteSpec],
                  budget: Optional[ResourceBudget] = None, *,
-                 fuse: bool = False, calibration=None) -> "NetworkPlan":
+                 fuse: bool = True, calibration=None,
+                 mesh: Optional[MeshSpec] = None) -> "NetworkPlan":
     """Map a network of sites onto one partitioned budget (memoized).
 
     Partitioning: fractions proportional to each site's cheapest
@@ -468,7 +519,10 @@ def plan_network(specs: Iterable[SiteSpec],
     the full budget, or when the sites' minimal needs exceed the
     envelope.
 
-    ``fuse=True`` turns on **fusion-aware planning**: adjacent runs a
+    ``fuse=True`` (the default since the calibration benchmarks showed
+    the calibrated fused-vs-unfused ranking matches measured wall-clock
+    on every budget; pass ``fuse=False`` to opt out) turns on
+    **fusion-aware planning**: adjacent runs a
     registered fused family absorbs (e.g. conv->pool->act, declared via
     ``IPFamily.fuses``) are substituted by the single fused site when
     the fused member is feasible at the full budget and its combined
@@ -476,6 +530,19 @@ def plan_network(specs: Iterable[SiteSpec],
     fused footprint then breaks the partition are unfused again one at
     a time (largest minimal need first) until the plan closes — the
     fused plan can only ever *gain* feasibility over the unfused one.
+
+    ``mesh=`` (a ``MeshSpec`` with devices > 1) turns on **mesh-sharded
+    planning**: per site the planner chooses between replicating on one
+    device and splitting across all of them (batch- or channel-
+    parallel, ``core/shard.py``), pricing each split's collective
+    traffic — psum for channel-split convs, boundary/egress all-gathers
+    — in cycles at the mesh's link bandwidth via
+    ``Footprint.comm_cycles``.  Each device sees the FULL ``budget``
+    (that is what an N-device grant means); a site infeasible on one
+    device but feasible split is rescued by the shard.  Sharded sites
+    keep their GLOBAL spec (``NetworkPlan.device_plan()`` recovers the
+    per-device view); execution lowers them through ``shard_map``
+    (``distributed/shard_exec.py``).
 
     ``calibration=`` re-ranks every cost comparison (member selection,
     the fused-vs-unfused decision, the partition shares) by the table's
@@ -485,21 +552,23 @@ def plan_network(specs: Iterable[SiteSpec],
     refitted — tables never collide.
     """
     budget = budget or ResourceBudget()
-    key = (tuple(specs), budget, fuse, calibration_key(calibration))
+    key = (tuple(specs), budget, fuse, mesh, calibration_key(calibration))
     cached = _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
         return cached
     STATS.plan_misses += 1
-    plan = _plan_uncached(key[0], budget, fuse=fuse, calibration=calibration)
+    plan = _plan_uncached(key[0], budget, fuse=fuse, calibration=calibration,
+                          mesh=mesh)
     _cache_put(key, plan)
     return plan
 
 
 def replan(specs: Iterable[SiteSpec],
            budget: Optional[ResourceBudget] = None, *,
-           fuse: bool = False, strict: bool = False,
-           calibration=None) -> "NetworkPlan":
+           fuse: bool = True, strict: bool = False,
+           calibration=None,
+           mesh: Optional[MeshSpec] = None) -> "NetworkPlan":
     """Re-plan a known graph under a moved budget — the serving fast path.
 
     Exact ``(graph, budget)`` repeats are cache hits like
@@ -527,11 +596,21 @@ def replan(specs: Iterable[SiteSpec],
     under the *same* table identity — a refreshed (refitted) table
     finds no shares and falls cold, re-deriving the assignment from the
     new predictions instead of serving a stale-calibration split.
+
+    With ``mesh=`` (devices > 1) the share heuristic does not apply —
+    the sharding decisions depend on mesh geometry, not just the moved
+    envelope — so the call goes through the full (memoized)
+    ``plan_network`` path; exact repeats are still O(1) cache hits.
     """
     budget = budget or ResourceBudget()
+    if mesh is not None and mesh.devices > 1:
+        return plan_network(specs, budget, fuse=fuse, mesh=mesh,
+                            calibration=calibration)
     specs = tuple(specs)
     calkey = calibration_key(calibration)
-    key = (specs, budget, fuse, calkey)
+    # same key shape as plan_network (mesh slot None here) so no-mesh
+    # replans and plans share cache entries
+    key = (specs, budget, fuse, None, calkey)
     cached = None if strict else _cache_get(key)
     if cached is not None:
         STATS.plan_hits += 1
@@ -717,9 +796,10 @@ def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None):
 
 
 def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                   fuse: bool = False, calibration=None) -> NetworkPlan:
+                   fuse: bool = False, calibration=None,
+                   mesh: Optional[MeshSpec] = None) -> NetworkPlan:
     if not specs:
-        return NetworkPlan(budget=budget, sites=())
+        return NetworkPlan(budget=budget, sites=(), mesh=mesh)
     names = [s.name for s in specs]
     if len(set(names)) != len(names):
         dupes = sorted({n for n in names if names.count(n) > 1})
@@ -740,8 +820,25 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
                    else (specs, []))
     while True:
         try:
-            plan = _plan_effective(eff, budget, select_full,
-                                   calibration=calibration, calkey=calkey)
+            if mesh is not None and mesh.devices > 1:
+                # The sharding pass runs INSIDE the fallback loop: when
+                # a fused group later unfuses, the new chain re-decides
+                # its splits (the fused site's batch-only rule no
+                # longer binds).
+                from repro.core.shard import plan_shard_decisions
+                shardings = plan_shard_decisions(
+                    eff, budget, mesh, select_full, calibration)
+                plan = _plan_effective(
+                    tuple(sh.spec for sh in shardings), budget,
+                    select_full, calibration=calibration, calkey=calkey)
+                plan = _apply_shardings(plan, eff, shardings, budget,
+                                        mesh)
+            else:
+                plan = _plan_effective(eff, budget, select_full,
+                                       calibration=calibration,
+                                       calkey=calkey)
+                if mesh is not None:
+                    plan = dataclasses.replace(plan, mesh=mesh)
             break
         except ValueError as e:
             # Only a broken partition is fusion's fault (every chosen
@@ -764,6 +861,29 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
         if len(_FUSE_CACHE) > _SHARE_CACHE_MAX:
             _FUSE_CACHE.pop(next(iter(_FUSE_CACHE)))
     return plan
+
+
+def _apply_shardings(plan: NetworkPlan, eff: Tuple[SiteSpec, ...],
+                     shardings, budget: ResourceBudget,
+                     mesh: MeshSpec) -> NetworkPlan:
+    """Map a plan built on per-device shard specs back to the GLOBAL
+    specs, folding each site's collective cycles into its footprint:
+    ``comm_cycles`` carries the collective term and ``est_cycles``
+    grows by it, so ``total_cycles``/``calibrated_cycles`` price the
+    traffic and the calibration layer can regress on the comm axis."""
+    sites = []
+    for ps, sh, gspec in zip(plan.sites, shardings, eff):
+        if sh.degree > 1 or sh.comm_cycles:
+            fp = dataclasses.replace(
+                ps.footprint,
+                est_cycles=ps.footprint.est_cycles + sh.comm_cycles,
+                comm_cycles=sh.comm_cycles)
+            sites.append(dataclasses.replace(
+                ps, spec=gspec, footprint=fp, shard_axis=sh.axis,
+                shard_degree=sh.degree))
+        else:
+            sites.append(ps)
+    return NetworkPlan(budget=budget, sites=tuple(sites), mesh=mesh)
 
 
 def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,

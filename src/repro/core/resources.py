@@ -29,6 +29,66 @@ CLOCK_HZ = 940e6                  # v5e core clock
 MXU_DIM = 128                     # systolic array is 128x128
 LANE = 128                        # last-dim tile
 SUBLANE = 8                       # second-to-last-dim tile (fp32)
+# Collective pricing unit: bytes one ICI link moves per core cycle —
+# what a sharded site's collective traffic is converted to cycles with
+# (the FPGA analogy is the inter-board serial links of a multi-FPGA
+# deployment; a deployment with slower links overrides it per MeshSpec).
+ICI_BYTES_PER_CYCLE = ICI_BW_PER_LINK / CLOCK_HZ
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A device mesh the planner may spread one plan across.
+
+    The paper sizes one network against ONE fabric; the scale-out story
+    (multi-FPGA boards, TPU slices) offers ``devices`` identical fabrics
+    joined by links of finite bandwidth.  ``MeshSpec`` is the planner's
+    view of that grant: how many devices, the mesh-axis name execution
+    shards over, and the link bandwidth collective traffic is priced at
+    (``ici_bytes_per_cycle``; cycles here are core cycles, the same unit
+    as ``Footprint.est_cycles``).  Hashable — it participates in plan
+    cache keys.
+    """
+
+    devices: int = 1
+    axis: str = "shard"
+    ici_bytes_per_cycle: float = ICI_BYTES_PER_CYCLE
+
+    def __post_init__(self):
+        if self.devices < 1:
+            raise ValueError(f"mesh needs >= 1 device, got {self.devices}")
+        if self.ici_bytes_per_cycle <= 0.0:
+            raise ValueError("ici_bytes_per_cycle must be positive")
+
+    def ici_cycles(self, n_bytes: float) -> float:
+        """Cycles to move ``n_bytes`` across one link."""
+        return n_bytes / self.ici_bytes_per_cycle
+
+    def all_gather_cycles(self, n_bytes: float) -> float:
+        """Ring all-gather of a tensor of GLOBAL size ``n_bytes``: each
+        device receives the (devices-1)/devices of it that it does not
+        already hold."""
+        d = self.devices
+        if d <= 1:
+            return 0.0
+        return self.ici_cycles(n_bytes * (d - 1) / d)
+
+    def all_reduce_cycles(self, n_bytes: float) -> float:
+        """Ring all-reduce (reduce-scatter + all-gather) of a tensor of
+        size ``n_bytes``: 2 * (d-1)/d of it crosses each link — the cost
+        a channel-split conv pays to sum its partial outputs."""
+        d = self.devices
+        if d <= 1:
+            return 0.0
+        return self.ici_cycles(2.0 * n_bytes * (d - 1) / d)
+
+    def halo_cycles(self, n_bytes: float) -> float:
+        """Neighbor exchange of ``n_bytes`` of boundary rows — what a
+        spatial conv split pays per step (both edges move in parallel
+        over distinct links, so one halo's bytes price the exchange)."""
+        if self.devices <= 1:
+            return 0.0
+        return self.ici_cycles(n_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,15 +152,21 @@ class Footprint:
     launches: int = 1               # pallas_call launches per invocation;
                                     # a fused conv->pool->act member is 1
                                     # where the unfused chain costs 3
+    comm_cycles: float = 0.0        # collective traffic a sharded site
+                                    # pays (ICI cycles; 0 for the
+                                    # single-device footprints families
+                                    # price) — folded into est_cycles
 
     @property
     def compute_cycles(self) -> float:
-        """The compute half of the additive ``cost_cycles`` split:
+        """The compute term of the additive ``cost_cycles`` split:
         ``est_cycles`` minus the DMA cycles its ``hbm_bytes`` price in
-        (clamped at zero for footprints priced under an older rule).
-        These are the two analytical axes the measurement-calibrated
-        cost model (``core/calibrate_cost.py``) regresses over."""
-        return max(self.est_cycles - hbm_cycles(self.hbm_bytes), 0.0)
+        and minus its collective ``comm_cycles`` (clamped at zero for
+        footprints priced under an older rule).  These are the
+        analytical axes the measurement-calibrated cost model
+        (``core/calibrate_cost.py``) regresses over."""
+        return max(self.est_cycles - hbm_cycles(self.hbm_bytes)
+                   - self.comm_cycles, 0.0)
 
     def calibrated_cycles(self, calibration, member: str) -> float:
         """This footprint's cost under a measurement-derived
@@ -129,9 +195,11 @@ class Footprint:
         return True
 
 
-def cost_cycles(compute_cycles: float, hbm_bytes: int) -> float:
+def cost_cycles(compute_cycles: float, hbm_bytes: int,
+                comm_cycles: float = 0.0) -> float:
     """The shared est-cycles rule every footprint prices with: a kernel
-    launch pays its compute AND its DMA traffic.
+    launch pays its compute AND its DMA traffic AND (for sharded sites)
+    its collective traffic.
 
     The earlier model took ``max(compute, dma)`` (perfect overlap), which
     made HBM round-trips free whenever compute dominated — exactly the
@@ -140,8 +208,11 @@ def cost_cycles(compute_cycles: float, hbm_bytes: int) -> float:
     column, not an overlap hint), and it is what lets a fused
     conv->pool->act member's saved intermediate reads+writes show up as
     a counted est-cycles drop (docs/adaptive_ips.md, "Fusion contract").
+    ``comm_cycles`` extends the same serial rule to collectives: a
+    sharded site pays its halo/psum/all-gather bytes at the mesh's link
+    bandwidth (docs/adaptive_ips.md, "Sharding contract").
     """
-    return compute_cycles + hbm_cycles(hbm_bytes)
+    return compute_cycles + hbm_cycles(hbm_bytes) + comm_cycles
 
 
 def mxu_pass_cycles(m: int, k: int, n: int) -> float:

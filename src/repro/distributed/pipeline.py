@@ -43,11 +43,22 @@ def gpipe_forward(stage_fn: Callable, mesh: Mesh, *, axis: str = "pipe"):
 
         def tick(t, carry):
             buf, outs = carry
-            # stage 0 ingests microbatch t (if any); others use recv buf
-            x_in = jnp.where(t < n_micro, x_micro[jnp.minimum(t, n_micro - 1)],
+            # stage 0 ingests microbatch t during fill; drain ticks read
+            # index 0 (any in-bounds index) and select zeros — never a
+            # clamped re-read of the last microbatch
+            ingesting = t < n_micro
+            x_in = jnp.where(ingesting,
+                             x_micro[jnp.where(ingesting, t, 0)],
                              jnp.zeros_like(buf))
             my_in = jnp.where(rank == 0, x_in, buf)
             y = stage_fn(params, my_in)
+            # rank r's tick-t compute is microbatch (t - r): only the
+            # fill+drain window [r, r + n_micro) is real work.  Mask the
+            # stale ticks explicitly so whatever stage_fn makes of a
+            # zero/garbage buffer (f(0) != 0, NaNs, ...) can never reach
+            # the handoff or the emitted outputs.
+            valid = jnp.logical_and(rank <= t, t - rank < n_micro)
+            y = jnp.where(valid, y, jnp.zeros_like(y))
             # last stage emits microbatch (t - (n_stages-1)) at this tick
             out_idx = t - (n_stages - 1)
             emit = jnp.logical_and(rank == n_stages - 1, out_idx >= 0)

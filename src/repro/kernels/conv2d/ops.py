@@ -25,15 +25,40 @@ _SINGLE = {"ip1_vpu": conv2d_ip1, "ip2_mxu": conv2d_ip2}
 _DUAL = {"ip3_packed": conv2d_ip3, "ip4_dual": conv2d_ip4}
 
 
+def _maybe_reduce(y: jnp.ndarray, reduce_axis: Optional[str],
+                  reduce: str) -> jnp.ndarray:
+    """The channel-split hook: inside ``shard_map``, a conv whose input
+    channels are sharded produces a *partial* sum — summing the partials
+    over the mesh axis makes it the full output on every device.
+    ``reduce="psum"`` is the XLA reference; ``"ring"`` goes through the
+    explicit ppermute ring (``distributed/collectives.py``)."""
+    if reduce_axis is None:
+        return y
+    if reduce == "ring":
+        from repro.distributed.collectives import ring_all_reduce
+        return ring_all_reduce(y, reduce_axis)
+    if reduce != "psum":
+        raise ValueError(f"unknown reduce {reduce!r}; have ('psum', 'ring')")
+    import jax
+    return jax.lax.psum(y, reduce_axis)
+
+
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
            budget: Optional[ResourceBudget] = None, ladder=(),
-           interpret: bool = True, **tile_kwargs) -> jnp.ndarray:
+           interpret: bool = True, reduce_axis: Optional[str] = None,
+           reduce: str = "psum", **tile_kwargs) -> jnp.ndarray:
     """Single-stream convolution through a selected IP (Conv1/Conv2).
 
     ``tile_kwargs`` forward tiling parameters to the member (e.g.
     ``block_cout=`` for ``ip2_mxu``, typically from
     ``core.autotune.plan_tile_overrides``); pass them only with an
     explicit ``ip=`` or a plan known to pick a member that accepts them.
+
+    ``reduce_axis=`` is the mesh-sharded execution hook: under
+    ``shard_map`` with input channels split across that named axis, each
+    device's result is a partial sum and this call all-reduces it into
+    the full output (``reduce=`` picks ``"psum"`` or the explicit
+    ``"ring"`` path; see distributed/shard_exec.py).
     """
     if ip is None:
         from repro.core.ip import SiteSpec
@@ -43,14 +68,16 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, ip: Optional[str] = None,
         planned = plan_single(spec, budget)
         if planned.lowered:
             from repro.quant.ops import quantized_conv2d
-            return quantized_conv2d(x, w, bits=planned.precision_bits,
-                                    ip=planned.ip.name, interpret=interpret)
+            y = quantized_conv2d(x, w, bits=planned.precision_bits,
+                                 ip=planned.ip.name, interpret=interpret)
+            return _maybe_reduce(y, reduce_axis, reduce)
         ip = planned.ip.name
     ip = ip.split(".")[-1]
     if ip not in _SINGLE:
         raise KeyError(f"{ip!r} is not a single-stream conv IP "
                        f"(have {sorted(_SINGLE)})")
-    return _SINGLE[ip](x, w, interpret=interpret, **tile_kwargs)
+    y = _SINGLE[ip](x, w, interpret=interpret, **tile_kwargs)
+    return _maybe_reduce(y, reduce_axis, reduce)
 
 
 def conv2d_dual(xa: jnp.ndarray, xb: jnp.ndarray, w: jnp.ndarray, *,

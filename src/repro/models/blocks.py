@@ -224,7 +224,7 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
                     activation: str = "relu", interpret: bool = True,
                     plan=None, site: str = "cnn_block", network=None,
                     ladder=(), quant_report=None, tile_overrides=None,
-                    fuse: bool = False):
+                    fuse: bool = True):
     """One adaptive CNN layer: conv -> pool -> activation.
 
     The three sites are planned as one ``NetworkPlan`` under a
@@ -236,7 +236,7 @@ def apply_cnn_block(p, x, *, budget=None, pool_window=(2, 2),
     passed, the three (KernelIP, Footprint) decisions are recorded
     under ``site`` — renderable with ``describe_plan``.
 
-    **Fusion.** ``fuse=True`` plans with fusion-aware substitution
+    **Fusion.** ``fuse`` (default True) plans with fusion-aware substitution
     (``core.plan.plan_network(..., fuse=True)``): when the planner maps
     this block onto a single fused site (``<site>.fused``), the whole
     conv -> pool -> activation chain executes as ONE ``pallas_call``

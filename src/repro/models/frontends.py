@@ -89,7 +89,7 @@ def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
                        activation: str = "relu", interpret: bool = True,
                        plan=None, ladder=(), quant_report=None,
                        network=None, tile_overrides=None,
-                       fuse: bool = False):
+                       fuse: bool = True):
     """images: (B, H, W, Cin) -> patch embeddings (B, S, d_model).
 
     The entire stack (every conv/pool/act of every block) is planned as
@@ -111,10 +111,10 @@ def apply_cnn_frontend(p, images, *, budget=None, pool_window=(2, 2),
     never changes this function's output dtype — only its accuracy,
     which the report quantifies.
 
-    ``fuse=True`` plans the stack fusion-aware: every block the planner
-    can map onto a fused conv->pool->act site executes as ONE launch
-    (see ``apply_cnn_block``); blocks whose fused footprint does not
-    fit keep the three-launch chain.
+    ``fuse`` (default True) plans the stack fusion-aware: every block
+    the planner can map onto a fused conv->pool->act site executes as
+    ONE launch (see ``apply_cnn_block``); blocks whose fused footprint
+    does not fit keep the three-launch chain.  ``fuse=False`` opts out.
     """
     from repro.core.plan import plan_network
     from repro.models.blocks import apply_cnn_block

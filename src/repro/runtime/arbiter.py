@@ -18,13 +18,22 @@ the server re-plan its tenants under the new slices
 steady-state optimality against re-plan churn.
 
 Pure trace-time Python; deterministic given the observation sequence.
+**Mesh mode** (``mesh=`` a ``MeshSpec`` with devices > 1): the arbiter
+grants *device slices* — disjoint sets of whole devices — instead of
+fractions of one chip.  Demand still drives the split, but grants are
+integers (largest-remainder rounding, every tenant floored at one whole
+device), ``budget_for`` returns the FULL per-device budget (a granted
+device is not shared), and ``mesh_for``/``device_slice`` expose the
+per-tenant sub-mesh the server plans and executes against
+(``core.plan.plan_network(mesh=...)``).  Admission rejects more tenants
+than devices — a tenant cannot hold less than one chip.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
-from repro.core.resources import ResourceBudget
+from repro.core.resources import MeshSpec, ResourceBudget
 
 POLICIES = ("demand", "static")
 
@@ -37,6 +46,7 @@ class TenantShare:
     demand: float       # EWMA of submitted work (est-cycles)
     floor: float        # minimal feasible fraction (ladder included)
     fraction: float     # granted fraction of the device budget
+    devices: int = 0    # mesh mode: whole devices granted (0 = no mesh)
 
 
 class BudgetArbiter:
@@ -49,13 +59,18 @@ class BudgetArbiter:
 
     def __init__(self, budget: Optional[ResourceBudget] = None, *,
                  policy: str = "demand", rebalance_threshold: float = 0.05,
-                 demand_alpha: float = 0.5, calibration=None):
+                 demand_alpha: float = 0.5, calibration=None,
+                 mesh: Optional[MeshSpec] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
         if not 0.0 < demand_alpha <= 1.0:
             raise ValueError("demand_alpha must be in (0, 1]")
         self.budget = budget or ResourceBudget()
         self.policy = policy
+        # Mesh mode: grants are whole-device slices of this mesh; None
+        # (or one device) keeps the fractional single-chip behavior.
+        self.mesh = mesh if (mesh is not None and mesh.devices > 1) else None
+        self._devices: Dict[str, int] = {}
         # The unit the demand EWMA is denominated in: with a fitted
         # CalibrationTable the server prices each tenant's unit cost in
         # *calibrated* cycles, so grants track measured work, not the
@@ -76,6 +91,11 @@ class BudgetArbiter:
         entry behind."""
         if name in self._floors:
             raise ValueError(f"tenant {name!r} already registered")
+        if self.mesh is not None and len(self._floors) >= self.mesh.devices:
+            raise ValueError(
+                f"mesh has {self.mesh.devices} devices and every tenant "
+                f"holds at least one whole device; cannot admit "
+                f"{name!r} as tenant #{len(self._floors) + 1}")
         floor = min(max(float(floor), 0.0), 1.0)
         floors = {**self._floors, name: floor}
         if self.policy == "demand":
@@ -145,14 +165,71 @@ class BudgetArbiter:
                  > self.rebalance_threshold for m in targets):
             self._granted = dict(targets)
             self.rebalances += 1
+        self._devices = self._device_grants(self._granted)
         return {m: TenantShare(name=m, demand=self._demand[m],
                                floor=self._floors[m],
-                               fraction=self._granted[m])
+                               fraction=self._granted[m],
+                               devices=self._devices.get(m, 0))
                 for m in self._floors}
 
+    def _device_grants(self, granted: Dict[str, float]) -> Dict[str, int]:
+        """Mesh mode: the fractional grants rounded to whole devices —
+        every tenant floored at ONE device, the rest split by largest
+        remainder (deterministic: remainder then name).  Empty when not
+        in mesh mode."""
+        if self.mesh is None or not granted:
+            return {}
+        d = self.mesh.devices
+        names = list(granted)
+        spare = d - len(names)
+        raw = {m: max(granted[m] * d - 1.0, 0.0) for m in names}
+        total = sum(raw.values())
+        if total <= 0.0 or spare <= 0:
+            ideal = {m: 0.0 for m in names}
+        else:
+            ideal = {m: raw[m] / total * spare for m in names}
+        grant = {m: 1 + int(ideal[m]) for m in names}
+        left = d - sum(grant.values())
+        order = sorted(names, key=lambda m: (-(ideal[m] - int(ideal[m])), m))
+        for m in order[:left]:
+            grant[m] += 1
+        return grant
+
     def budget_for(self, name: str) -> ResourceBudget:
-        """The device-budget slice currently granted to ``name``."""
+        """The budget slice currently granted to ``name``.  Mesh mode
+        grants whole devices, so every tenant plans against the FULL
+        per-device budget; its parallelism comes from ``mesh_for``."""
         if name not in self._granted:
             raise KeyError(f"tenant {name!r} has no grant yet "
                            f"(call split() first)")
+        if self.mesh is not None:
+            return self.budget
         return self.budget.scaled(self._granted[name])
+
+    def devices_for(self, name: str) -> int:
+        """Mesh mode: whole devices currently granted to ``name``."""
+        if self.mesh is None:
+            raise ValueError("arbiter is not in mesh mode")
+        if name not in self._devices:
+            raise KeyError(f"tenant {name!r} has no device grant yet "
+                           f"(call split() first)")
+        return self._devices[name]
+
+    def mesh_for(self, name: str) -> MeshSpec:
+        """The per-tenant sub-mesh: same axis and link bandwidth as the
+        arbiter's mesh, sized to the tenant's device grant — what the
+        server hands to ``plan_network(mesh=...)``."""
+        return dataclasses.replace(self.mesh,
+                                   devices=self.devices_for(name))
+
+    def device_slice(self, name: str) -> Tuple[int, int]:
+        """The contiguous [start, stop) device-index range granted to
+        ``name`` (registration order) — what execution builds its
+        ``jax.sharding.Mesh`` over."""
+        n = self.devices_for(name)
+        start = 0
+        for m in self._floors:
+            if m == name:
+                return (start, start + n)
+            start += self._devices[m]
+        raise KeyError(name)  # pragma: no cover — devices_for gates

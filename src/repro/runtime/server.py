@@ -38,7 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.plan import (STATS, network_min_fraction, plan_network,
                              replan)
-from repro.core.resources import ResourceBudget
+from repro.core.resources import MeshSpec, ResourceBudget
 from repro.models.frontends import apply_cnn_frontend, cnn_frontend_site_specs
 from repro.runtime.arbiter import BudgetArbiter, TenantShare
 from repro.runtime.batching import Request, ShapeBucketQueue
@@ -93,22 +93,30 @@ class AdaptiveServer:
                  policy: str = "demand", rebalance_threshold: float = 0.05,
                  max_batch: int = 4, autotune: bool = False,
                  interpret: bool = True, demand_alpha: float = 0.5,
-                 fuse: bool = False, calibration=None):
+                 fuse: bool = True, calibration=None,
+                 mesh: Optional[MeshSpec] = None):
         self.budget = budget or ResourceBudget()
-        # fuse=True serves every tenant through fusion-aware plans: a
-        # block the planner can fuse runs conv->pool->act as ONE launch
-        # (falling back per block when the fused footprint won't fit the
-        # tenant's slice) — the hot-path est-cycles win of this PR.
+        # fuse (default True): serve every tenant through fusion-aware
+        # plans — a block the planner can fuse runs conv->pool->act as
+        # ONE launch, falling back per block when the fused footprint
+        # won't fit the tenant's slice.  fuse=False opts out.
         self.fuse = fuse
         # calibration: a fitted CalibrationTable prices every planning
         # decision, the demand weights, and the lane time model in
         # measured scale factors instead of the raw analytical cycles
         # (see core/calibrate_cost.py).  None keeps the analytical model.
         self.calibration = calibration
+        # mesh: a MeshSpec with devices > 1 puts the arbiter in mesh
+        # mode — tenants are granted whole-device slices and each batch
+        # is planned with plan_network(mesh=<tenant sub-mesh>), so a
+        # tenant holding several devices may serve *sharded* plans
+        # (executed through shard_map when the layout is uniform; see
+        # _execute).  None keeps the fractional single-chip server.
         self.arbiter = BudgetArbiter(self.budget, policy=policy,
                                      rebalance_threshold=rebalance_threshold,
                                      demand_alpha=demand_alpha,
-                                     calibration=calibration)
+                                     calibration=calibration, mesh=mesh)
+        self.mesh = self.arbiter.mesh
         self.max_batch = max_batch
         self.autotune = autotune
         self.interpret = interpret
@@ -231,7 +239,15 @@ class AdaptiveServer:
     def _execute(self, batch: List[Request]) -> List[Completion]:
         tenant = self.tenants[batch[0].tenant]
         xb = jnp.stack([r.x for r in batch])
-        slice_budget = self.budget.scaled(tenant.granted)
+        if self.mesh is not None:
+            # mesh mode: the tenant holds whole devices — plan against
+            # the FULL per-device budget and let the planner decide how
+            # (whether) to shard across the granted sub-mesh.
+            slice_budget = self.arbiter.budget_for(tenant.name)
+            tenant_mesh = self.arbiter.mesh_for(tenant.name)
+        else:
+            slice_budget = self.budget.scaled(tenant.granted)
+            tenant_mesh = None
         skey = (tenant.name, xb.shape, str(xb.dtype))
         specs = self._specs_cache.get(skey)
         if specs is None:
@@ -243,7 +259,7 @@ class AdaptiveServer:
             self._specs_cache[skey] = specs
         hits0, misses0 = STATS.plan_hits, STATS.plan_misses
         plan = replan(specs, slice_budget, fuse=self.fuse,
-                      calibration=self.calibration)
+                      calibration=self.calibration, mesh=tenant_mesh)
         tile_overrides = None
         if self.autotune:
             tkey = (specs, slice_budget)
@@ -255,14 +271,18 @@ class AdaptiveServer:
                     self._tile_cache.pop(next(iter(self._tile_cache)))
                 self._tile_cache[tkey] = tile_overrides
         quant_report = {} if (tenant.ladder and tenant.measure_quant) else None
-        y = apply_cnn_frontend(tenant.params, xb, network=plan,
-                               pool_window=tenant.pool_window,
-                               activation=tenant.activation,
-                               interpret=self.interpret,
-                               ladder=tenant.ladder,
-                               quant_report=quant_report,
-                               tile_overrides=tile_overrides,
-                               fuse=self.fuse)
+        if self._shardable(plan, xb):
+            y = self._run_frontend_sharded(tenant, xb, plan,
+                                           tile_overrides=tile_overrides)
+        else:
+            y = apply_cnn_frontend(tenant.params, xb, network=plan,
+                                   pool_window=tenant.pool_window,
+                                   activation=tenant.activation,
+                                   interpret=self.interpret,
+                                   ladder=tenant.ladder,
+                                   quant_report=quant_report,
+                                   tile_overrides=tile_overrides,
+                                   fuse=self.fuse)
         start = max(tenant.lane_free, max(r.arrival for r in batch))
         finish = start + plan.calibrated_cycles(self.calibration)
         tenant.lane_free = finish
@@ -280,6 +300,61 @@ class AdaptiveServer:
                            arrival=r.arrival, finished=finish,
                            batch_size=len(batch))
                 for i, r in enumerate(batch)]
+
+    @staticmethod
+    def _shardable(plan, xb) -> bool:
+        """True when the plan can run through the shard_map frontend
+        path: a mesh plan whose sites are ALL batch-sharded at the mesh
+        degree (a uniform layout needs no mid-chain relays inside the
+        frontend walk), float precision, and a batch that tiles evenly.
+        Mixed/chan/degree-1 layouts fall back to the replicated walk of
+        the same plan — identical math, the mesh then only reshapes the
+        time model."""
+        if plan.mesh is None or plan.mesh.devices <= 1:
+            return False
+        d = plan.mesh.devices
+        sharded = plan.sharded_sites()
+        if len(sharded) != len(plan.sites):
+            return False
+        if any(s.shard_axis != "batch" or s.shard_degree != d
+               or s.lowered for s in plan.sites):
+            return False
+        return xb.shape[0] % d == 0
+
+    def _run_frontend_sharded(self, tenant: Tenant, xb, plan,
+                              *, tile_overrides=None):
+        """The whole frontend under one shard_map over the tenant's
+        device slice: each device runs the per-device plan
+        (``plan.device_plan()``) on its batch block; ``out_specs``
+        re-tiles the result so the caller sees the replicated contract.
+        Bit-identical to the replicated walk for batch sharding (tests
+        assert it)."""
+        import numpy as np
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        d = plan.mesh.devices
+        start, stop = self.arbiter.device_slice(tenant.name)
+        devs = jax.devices()[start:stop]
+        if len(devs) < d:
+            raise ValueError(
+                f"tenant {tenant.name!r} was granted devices "
+                f"[{start}, {stop}) but only {len(jax.devices())} exist "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+        mesh = Mesh(np.array(devs), (plan.mesh.axis,))
+        dplan = plan.device_plan()
+
+        def device_fn(xg):
+            return apply_cnn_frontend(tenant.params, xg, network=dplan,
+                                      pool_window=tenant.pool_window,
+                                      activation=tenant.activation,
+                                      interpret=self.interpret,
+                                      tile_overrides=tile_overrides)
+
+        fn = shard_map(device_fn, mesh=mesh,
+                       in_specs=(P(plan.mesh.axis),),
+                       out_specs=P(plan.mesh.axis), check_rep=False)
+        return fn(xb)
 
     # -- observability ------------------------------------------------------
     def shares(self) -> Dict[str, TenantShare]:

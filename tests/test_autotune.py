@@ -168,12 +168,15 @@ def test_cnn_block_executes_with_tile_overrides(rng):
     x = jnp.asarray(rng.normal(size=(2, 12, 12, 8)).astype(np.float32))
     # a VPU-starved budget denies ip1_vpu the conv, so the tunable
     # ip2_mxu member wins and block_cout applies
+    # fuse=False: the override targets the standalone conv site, which
+    # the fused default would collapse into cnn_block.fused
     budget = ResourceBudget(vpu_ops_budget=200_000)
     probe = {}
     base = apply_cnn_block(block, x, activation="relu", plan=probe,
-                           budget=budget)
+                           budget=budget, fuse=False)
     assert probe["cnn_block.conv"][0].name.endswith("ip2_mxu")
     y = apply_cnn_block(block, x, activation="relu", budget=budget,
+                        fuse=False,
                         tile_overrides={"cnn_block.conv":
                                         {"block_cout": 128}})
     np.testing.assert_allclose(np.asarray(y), np.asarray(base), rtol=1e-6)

@@ -27,8 +27,9 @@ def _fp(compute=1000.0, hbm=4096, vmem=1024):
 
 
 def _plane_samples(a, b, c, points):
-    """(compute, hbm, us) rows lying exactly on a known affine plane."""
-    return [(comp, hbm, a * comp + b * hbm + c) for comp, hbm in points]
+    """(compute, hbm, comm, us) rows lying exactly on a known affine
+    plane with no collective traffic (comm column all zero)."""
+    return [(comp, hbm, 0.0, a * comp + b * hbm + c) for comp, hbm in points]
 
 
 def _block_specs(site="cal"):
@@ -60,8 +61,8 @@ def test_affine_fit_recovers_known_plane():
 def test_affine_fit_clamps_coefficients_nonnegative():
     # us DECREASES in hbm_bytes here; the unconstrained solve would go
     # negative on that axis — the active-set clamp must zero it instead.
-    rows = [(100.0, 1 << 20, 50.0), (200.0, 1 << 16, 80.0),
-            (400.0, 1 << 10, 140.0), (800.0, 1 << 4, 260.0)]
+    rows = [(100.0, 1 << 20, 0.0, 50.0), (200.0, 1 << 16, 0.0, 80.0),
+            (400.0, 1 << 10, 0.0, 140.0), (800.0, 1 << 4, 0.0, 260.0)]
     fit = _affine_fit(rows)
     assert fit.us_per_compute_cycle >= 0.0
     assert fit.us_per_hbm_byte >= 0.0
@@ -267,16 +268,18 @@ def test_calibration_flips_fusion_choice():
 
 
 def test_calibration_flips_member_ranking():
+    # fuse=False: this test exercises PER-MEMBER ranking inside the
+    # conv2d family, which the fused group would otherwise collapse away.
     specs = _block_specs("rank")
     budget = ResourceBudget()
     clear_plan_cache()
-    base = plan_network(specs, budget)
+    base = plan_network(specs, budget, fuse=False)
     conv_winner = next(s.ip.name for s in base.sites
                        if s.spec.family == "conv2d")
     # Price the analytical winner as measured-terrible; the planner must
     # choose a different conv member for the same site.
     table = CalibrationTable(fits={conv_winner: _const_fit(1e6)})
-    recal = plan_network(specs, budget, calibration=table)
+    recal = plan_network(specs, budget, fuse=False, calibration=table)
     new_winner = next(s.ip.name for s in recal.sites
                       if s.spec.family == "conv2d")
     assert new_winner != conv_winner

@@ -26,12 +26,20 @@ def test_block_shapes_and_plan(block, images):
     y = apply_cnn_block(block, images, plan=plan, activation="tanh")
     # 16x16 -(3x3 valid)-> 14x14 -(2x2 pool)-> 7x7
     assert y.shape == (2, 7, 7, 16)
+    # the default plan fuses the whole block into one launch...
+    assert set(plan) == {"cnn_block.fused"}
+    assert plan["cnn_block.fused"][0].family == "cnn_fused"
+    # ...and fuse=False still exposes the three per-op decisions
+    plan = {}
+    y2 = apply_cnn_block(block, images, plan=plan, activation="tanh",
+                         fuse=False)
     assert set(plan) == {"cnn_block.conv", "cnn_block.pool", "cnn_block.act"}
     for site, (ip, fp) in plan.items():
         assert fp.fits(ResourceBudget()), (site, ip.name)
     assert plan["cnn_block.conv"][0].family == "conv2d"
     assert plan["cnn_block.pool"][0].family == "pool2d"
     assert plan["cnn_block.act"][0].family == "activation"
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
 
 
 def test_block_budget_invariance(block, images):
@@ -71,7 +79,11 @@ def test_frontend_produces_patch_embeddings(rng):
     emb = apply_cnn_frontend(p, imgs, plan=plan)
     # 16 -> conv 14 -> pool 7 -> conv 5 -> pool 2; S = 2*2
     assert emb.shape == (2, 4, 32)
-    # two blocks x three selector decisions each
+    # two blocks, each fused to one selector decision by default
+    assert len(plan) == 2
+    # opting out of fusion exposes three decisions per block
+    plan = {}
+    apply_cnn_frontend(p, imgs, plan=plan, fuse=False)
     assert len(plan) == 6
 
 

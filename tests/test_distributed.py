@@ -104,6 +104,77 @@ def test_gpipe_pipeline_forward():
     """)
 
 
+def test_ring_all_reduce_padding_and_dtypes():
+    """Edge cases of the explicit ring: payloads where x.size % n != 0
+    (the padding path), a 1-device axis (identity), and integer dtypes —
+    int sums are associative, so ring and psum must agree BIT-exactly."""
+    run_sub("""
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import ring_all_reduce
+
+        def both(mesh, axis, x):
+            ring = shard_map(lambda v: ring_all_reduce(v, axis), mesh=mesh,
+                             in_specs=P(axis), out_specs=P(axis),
+                             check_rep=False)(x)
+            ref = shard_map(lambda v: jax.lax.psum(v, axis), mesh=mesh,
+                            in_specs=P(axis), out_specs=P(axis),
+                            check_rep=False)(x)
+            return np.asarray(ring), np.asarray(ref)
+
+        mesh8 = jax.make_mesh((8,), ("data",))
+        # per-device payload 3*5 = 15 elements: 15 % 8 != 0 pads by 1
+        xi = jnp.arange(8 * 3 * 5, dtype=jnp.int32).reshape(8, 3, 5)
+        g, w = both(mesh8, "data", xi)
+        np.testing.assert_array_equal(g, w)          # bit-exact (ints)
+        # payload smaller than the axis: 3 % 8 != 0 pads by 5
+        xs = jnp.arange(8 * 3, dtype=jnp.int32).reshape(8, 3)
+        g, w = both(mesh8, "data", xs)
+        np.testing.assert_array_equal(g, w)
+        # float with the padding path engaged: same sum up to order
+        xf = jnp.linspace(-3, 3, 8 * 7).reshape(8, 7).astype(jnp.float32)
+        g, w = both(mesh8, "data", xf)
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-5)
+        # n == 1: the ring is the identity and must equal psum bit-exact
+        mesh1 = Mesh(np.array(jax.devices()[:1]), ("one",))
+        x1 = jnp.linspace(0, 1, 10).reshape(2, 5).astype(jnp.float32)
+        g, w = both(mesh1, "one", x1)
+        np.testing.assert_array_equal(g, w)
+        np.testing.assert_array_equal(g, np.asarray(x1))
+        print("ring edges OK")
+    """)
+
+
+def test_gpipe_fill_drain_vs_sequential():
+    """Fill+drain schedule against a per-microbatch sequential reference,
+    with a stage fn whose f(0) != 0 — stale fill/drain ticks compute on
+    zero buffers, and only an explicit validity mask keeps their output
+    out of the handoff ring."""
+    run_sub("""
+        from repro.distributed.pipeline import gpipe_forward
+        n_stages = 4
+        mesh = jax.make_mesh((n_stages,), ("pipe",))
+        rng = np.random.default_rng(0)
+        params = jnp.asarray(rng.normal(0, 0.5, (n_stages, 4, 4))
+                             .astype(np.float32))
+
+        def stage(w, x):
+            # f(0) = 1 != 0: an unmasked drain tick would inject ones
+            return x @ w + 1.0
+
+        fn = jax.jit(gpipe_forward(stage, mesh, axis="pipe"))
+        for n_micro in (1, 5, 6):
+            x_micro = jnp.asarray(
+                rng.normal(size=(n_micro, 2, 4)).astype(np.float32))
+            ref = x_micro
+            for s in range(n_stages):
+                ref = jnp.einsum("mbi,ij->mbj", ref, params[s]) + 1.0
+            out = fn(params, x_micro)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+        print("gpipe fill+drain OK")
+    """)
+
+
 def test_sharded_train_step_matches_single_device():
     """The pjit'd train step on a 4x2 mesh computes the same loss as the
     unsharded step (up to float tolerance) — DP+TP correctness."""

@@ -136,7 +136,7 @@ def test_fused_plan_collapses_sites_and_cycles():
         shape = out.shape
     for budget in (ResourceBudget(), ResourceBudget(mxu_available=False),
                    ResourceBudget(vmem_bytes=600 * 1024)):
-        unfused = plan_network(specs, budget)
+        unfused = plan_network(specs, budget, fuse=False)
         fused = plan_network(specs, budget, fuse=True)
         assert len(fused) == 2 and len(unfused) == 6
         assert fused.total_launches == 2           # 3 -> 1 per block
@@ -149,11 +149,15 @@ def test_fused_plan_collapses_sites_and_cycles():
                 if u.spec.name.startswith(s.spec.name.split(".")[0]))
 
 
-def test_unfused_default_is_unchanged():
+def test_fusion_is_default_with_explicit_opt_out():
+    # Fusion is on by default (it is the honest est-cycles winner);
+    # fuse=False remains the explicit escape hatch for per-op plans.
     specs = _block_specs(site="nofuse")
     plan = plan_network(specs, ResourceBudget())
-    assert len(plan) == 3
-    assert all(s.spec.family != "cnn_fused" for s in plan.sites)
+    assert [s.spec.family for s in plan.sites] == ["cnn_fused"]
+    unfused = plan_network(specs, ResourceBudget(), fuse=False)
+    assert len(unfused) == 3
+    assert all(s.spec.family != "cnn_fused" for s in unfused.sites)
 
 
 def test_dual_conv_is_not_fused():
@@ -219,7 +223,7 @@ def test_fused_dma_traffic_strictly_smaller():
     footprint's HBM column drops the intermediate conv and pool tensors
     entirely."""
     specs = _block_specs((2, 16, 16, 4), 16, site="resc")
-    unfused = plan_network(specs, ResourceBudget())
+    unfused = plan_network(specs, ResourceBudget(), fuse=False)
     fused = plan_network(specs, ResourceBudget(), fuse=True)
     total_unfused_hbm = sum(s.footprint.hbm_bytes for s in unfused.sites)
     assert fused.site("resc.fused").footprint.hbm_bytes < total_unfused_hbm

@@ -210,7 +210,7 @@ def test_frontend_plans_whole_stack_as_one_network(rng):
     clear_plan_cache()
     misses = planner_stats().plan_misses
     out = {}
-    apply_cnn_frontend(p, imgs, plan=out)
+    apply_cnn_frontend(p, imgs, plan=out, fuse=False)
     # one whole-network plan covering both blocks, not one per block
     assert planner_stats().plan_misses == misses + 1
     assert len(out) == 6
@@ -338,7 +338,8 @@ def test_calibrated_and_uncalibrated_plans_cached_separately():
     plan_network(specs, budget, calibration=CalibrationTable())
     keys = [k for k in plan_mod._PLAN_CACHE if k[0] == specs]
     assert len(keys) == 2
-    assert {k[3] for k in keys} == {None,
+    # key layout: (specs, budget, fuse, mesh, calibration_key)
+    assert {k[4] for k in keys} == {None,
                                     CalibrationTable().key()}
 
 
@@ -369,13 +370,15 @@ def test_replan_strict_agrees_with_cold_calibrated_plan():
     budget = ResourceBudget(vmem_bytes=4 * 2**20)
     clear_plan_cache()
     # a table that actually changes decisions: the analytical conv
-    # winner is priced as measured-terrible
-    base = plan_network(specs, ResourceBudget())
+    # winner is priced as measured-terrible (fuse=False throughout —
+    # the scenario targets the per-op conv member)
+    base = plan_network(specs, ResourceBudget(), fuse=False)
     conv_winner = next(s.ip.name for s in base.sites
                        if s.spec.family == "conv2d")
     table = CalibrationTable(
         fits={conv_winner: AffineFit(0.0, 0.0, 1e6, 3)})
-    got = replan(specs, budget, strict=True, calibration=table)
-    cold = plan_mod._plan_uncached(specs, budget, calibration=table)
+    got = replan(specs, budget, strict=True, fuse=False, calibration=table)
+    cold = plan_mod._plan_uncached(specs, budget, fuse=False,
+                                   calibration=table)
     assert plan_mod._assignment(got) == plan_mod._assignment(cold)
     assert all(s.ip.name != conv_winner for s in got.sites)

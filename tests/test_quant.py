@@ -195,7 +195,10 @@ def test_mixed_precision_plan_json_round_trip():
         SiteSpec.make("m.act", "activation", ((2, 7, 7, 16),), "float32",
                       kind="relu"),
     ]
-    plan = plan_network(specs, ResourceBudget(vmem_bytes=40 * 1024))
+    # fuse=False: the squeeze that forces mixed precision targets the
+    # per-op footprints (the fused group fits 40 KiB without lowering)
+    plan = plan_network(specs, ResourceBudget(vmem_bytes=40 * 1024),
+                        fuse=False)
     bits = {s.spec.name: s.precision_bits for s in plan.sites}
     assert any(s.lowered for s in plan.sites)
     assert len(set(bits.values())) > 1      # genuinely mixed precisions
@@ -237,12 +240,15 @@ def test_apply_cnn_block_mixed_precision_end_to_end(rng):
     block = init_cnn_block(jax.random.PRNGKey(0), cin=8, cout=16, k=3)
     x = _randn(rng, CONV_X)
     y_f32 = apply_cnn_block(block, x, activation="relu")
+    # fuse=False below: 28 KiB starves the per-op sites (the fused
+    # group's smaller working set would still fit at f32)
     tight = ResourceBudget(vmem_bytes=28 * 1024)
     with pytest.raises(ValueError, match="no feasible"):
-        apply_cnn_block(block, x, budget=tight, activation="relu")
+        apply_cnn_block(block, x, budget=tight, activation="relu",
+                        fuse=False)
     report = {}
     y = apply_cnn_block(block, x, budget=tight, ladder=(16, 8),
-                        activation="relu", quant_report=report)
+                        activation="relu", quant_report=report, fuse=False)
     assert y.dtype == y_f32.dtype and y.shape == y_f32.shape
     assert relative_error(y, y_f32) < 5e-2
     # the report covers every site and every quantized site is bounded
@@ -263,7 +269,7 @@ def test_apply_cnn_frontend_with_ladder(rng):
     report = {}
     y = apply_cnn_frontend(p, imgs, budget=ResourceBudget(vmem_bytes=64
                                                           * 1024),
-                           ladder=(16, 8), quant_report=report)
+                           ladder=(16, 8), quant_report=report, fuse=False)
     assert y.shape == y_f32.shape
     assert relative_error(y, y_f32) < 5e-2
     assert len(report) == 6                 # 2 blocks x 3 sites
