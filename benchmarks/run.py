@@ -24,6 +24,12 @@ Paper tables (the reproduction targets):
       measured), and the planner must refuse to shard when collective
       cost outweighs the split (refusal measured via the forced-shard
       counterfactual); runs under a forced 2-device host mesh
+  table_obs                  — cross-layer observability: plan audits
+      must name concrete rejection reasons, a traced serving cycle must
+      export valid Chrome trace JSON (plan/kernel/arbiter spans) within
+      a bounded overhead of the untraced run, and the calibration drift
+      monitor must trip on a mis-scaled table while staying quiet on
+      the honest fit (recalibration re-arms it)
 
 System benches:
   bench_kernels     — us/call for every kernel family member
@@ -636,6 +642,187 @@ def table_mesh(smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Table O — cross-layer observability (src/repro/obs): four asserted
+# phases.
+# (a) AUDIT: every site whose constrained-budget choice moved off the
+#     ample-budget first choice must carry a concrete, numbered
+#     rejection reason in the plan audit (NetworkPlan.explain());
+# (b) TRACE: a traced serving cycle must export valid Chrome
+#     trace-event JSON containing plan, kernel, and arbiter spans
+#     (written to experiments/obs/trace.json — load it in Perfetto);
+# (c) OVERHEAD: the same serving trace with the tracer on must stay
+#     within a bounded factor of the tracer-off run (the disabled path
+#     is allocation-free; the enabled path is one dict per span);
+# (d) DRIFT: a calibration table fit on honest measurements must stay
+#     quiet under the drift monitor while the same measurements against
+#     a mis-scaled copy of the table must trip it — and recalibrate()
+#     must refit the bad table (new fingerprint) back to quiet.
+# Also writes the Prometheus exposition of the traced serving process
+# to experiments/obs/metrics.prom.
+# ---------------------------------------------------------------------------
+OBS_DRIFT_SCALE = 8.0          # the mis-scaled table's coefficient factor
+OBS_OVERHEAD_BOUND = 2.0       # tracer-on / tracer-off wall-clock ceiling
+
+
+def _obs_serving_cycle(n_heavy=4, n_light=2):
+    """One small serving trace (fresh caches, demand policy); returns
+    (server, wall-clock seconds)."""
+    from repro.core.plan import clear_plan_cache
+    from repro.core.resources import ResourceBudget
+    from repro.runtime import AdaptiveServer
+
+    clear_plan_cache()
+    device = ResourceBudget(vpu_ops_budget=SERVING_DEVICE_VPU_OPS,
+                            vmem_bytes=SERVING_DEVICE_VMEM)
+    heavy_p, light_p = _serving_tenants()
+    srv = AdaptiveServer(device, policy="demand", max_batch=4)
+    srv.register("vision-heavy", heavy_p, (32, 32, 8))
+    srv.register("edge-light", light_p, (24, 24, 6), activation="tanh",
+                 ladder=(16, 8))
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(2):
+        for _ in range(n_heavy):
+            srv.submit("vision-heavy",
+                       rng.normal(size=(32, 32, 8)).astype(np.float32))
+        for _ in range(n_light):
+            srv.submit("edge-light",
+                       rng.normal(size=(24, 24, 6)).astype(np.float32))
+        srv.step()
+    return srv, time.perf_counter() - t0
+
+
+def table_obs(smoke: bool = False):
+    from repro.core.calibrate_cost import (collect_plan_samples,
+                                           measure_planned_site,
+                                           member_key)
+    from repro.core.plan import clear_plan_cache, plan_network
+    from repro.core.resources import ResourceBudget
+    from repro.obs import TRACER, DriftMonitor, mis_scaled_table
+    print("# Table O — observability: plan audits name concrete "
+          "rejection reasons; a traced serving cycle exports valid "
+          "Chrome trace JSON with plan/kernel/arbiter spans within "
+          f"{OBS_OVERHEAD_BOUND}x of the untraced run; the drift "
+          "monitor stays quiet on the honest calibration table and "
+          f"trips on a {OBS_DRIFT_SCALE}x mis-scaled copy, and "
+          "recalibrate() refits it quiet")
+    out_dir = Path(__file__).resolve().parent.parent / "experiments" / "obs"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    repeat = 2 if smoke else REPEAT
+
+    # -- (a) plan decision audit -------------------------------------------
+    clear_plan_cache()
+    specs = precision_network_specs(PRECISION_LADDER)
+    ample = plan_network(specs, ResourceBudget())
+    first_choice = {s.spec.name: (s.ip.name, s.precision_bits)
+                    for s in ample.sites}
+    budgets = {
+        "vmem_600KiB": ResourceBudget(vmem_bytes=600 * 1024),
+        "vpu_starved": ResourceBudget(vpu_ops_budget=2_000_000),
+        "no_mxu": ResourceBudget(mxu_available=False),
+    }
+    non_first, explained = 0, 0
+    for bname, budget in budgets.items():
+        plan = plan_network(specs, budget)
+        assert plan.audit is not None, f"{bname}: cold plan has no audit"
+        for site in plan.sites:
+            choice = (site.ip.name, site.precision_bits)
+            was_first = first_choice.get(site.spec.name) == choice
+            lowered = site.precision_bits < site.spec.native_bits
+            if was_first and not lowered:
+                continue
+            non_first += 1
+            reasons = plan.audit.site(site.spec.name).rejection_reasons()
+            assert reasons and any(c.isdigit()
+                                   for r in reasons for c in r), (
+                f"{bname}/{site.spec.name}: moved off the first choice "
+                f"{first_choice.get(site.spec.name)} -> {choice} with no "
+                f"concrete rejection reason; explain():\n{plan.explain()}")
+            explained += 1
+    assert non_first > 0, "constrained budgets moved no site choices"
+    emit("table_obs.audit", 0.0,
+         f"non_first_choice={non_first};explained={explained};"
+         f"audit_ok={int(non_first == explained)}")
+
+    # -- (b) + (c) traced serving cycle, then the overhead bound -----------
+    _, base_s = _obs_serving_cycle()          # warm compile, tracer off
+    _, off_s = _obs_serving_cycle()
+    TRACER.clear()
+    TRACER.enable()
+    try:
+        srv, on_s = _obs_serving_cycle()
+        metrics_text = srv.metrics().render()
+    finally:
+        TRACER.disable()
+    doc = json.loads(TRACER.export_chrome_trace())
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in ("X", "i") and ev["name"] and "ts" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+    cats = {e["cat"] for e in doc["traceEvents"]}
+    missing = {"plan", "kernel", "arbiter"} - cats
+    assert not missing, f"trace is missing span categories: {missing}"
+    (out_dir / "trace.json").write_text(
+        TRACER.export_chrome_trace(indent=None))
+    (out_dir / "metrics.prom").write_text(metrics_text)
+    spans = sum(1 for e in doc["traceEvents"] if e["ph"] == "X")
+    ratio = on_s / max(off_s, 1e-9)
+    overhead_ok = ratio < OBS_OVERHEAD_BOUND
+    assert overhead_ok, (
+        f"tracing overhead {ratio:.2f}x exceeds the "
+        f"{OBS_OVERHEAD_BOUND}x bound (off={off_s * 1e6:.0f}us, "
+        f"on={on_s * 1e6:.0f}us)")
+    emit("table_obs.trace", on_s * 1e6,
+         f"trace_valid=1;spans={spans};events={len(doc['traceEvents'])}"
+         f";cats={'|'.join(sorted(cats))}"
+         f";off_us={off_s * 1e6:.0f};on_us={on_s * 1e6:.0f}"
+         f";overhead_x={ratio:.2f};overhead_ok={int(overhead_ok)}")
+
+    # -- (d) calibration drift --------------------------------------------
+    clear_plan_cache()
+    plan = plan_network(specs, ResourceBudget())
+    # discard one warm pass per site first: the fit and the monitor must
+    # observe the same warm regime, or still-warming early samples skew
+    # the fit and read as honest-table drift
+    for site in plan.sites:
+        measure_planned_site(site, repeat=1)
+    table = collect_plan_samples([plan], repeat=repeat).fit()
+    bad = mis_scaled_table(table, OBS_DRIFT_SCALE)
+    # threshold sits between interpret-mode timing noise (honest err
+    # ~0.3-0.8 on a loaded CI box) and the 8x mis-scale (err ~7)
+    honest_mon = DriftMonitor(table, threshold=2.0, min_observations=3)
+    bad_mon = DriftMonitor(bad, threshold=2.0, min_observations=3)
+    observations = []
+    for site in plan.sites:
+        member = member_key(site.ip.name, site.precision_bits,
+                            site.spec.native_bits)
+        us = measure_planned_site(site, repeat=repeat)
+        observations.append((member, site.footprint, us))
+        honest_mon.observe(member, site.footprint, us)
+        bad_mon.observe(member, site.footprint, us)
+    assert not honest_mon.drifted, (
+        f"honest table tripped the drift monitor: "
+        f"{honest_mon.snapshot()}")
+    assert bad_mon.drifted, (
+        f"{OBS_DRIFT_SCALE}x mis-scaled table did not trip: "
+        f"{bad_mon.snapshot()}")
+    old_fp = bad.fingerprint()
+    new_fp = bad_mon.recalibrate()
+    assert new_fp != old_fp, "recalibrate() did not move the fingerprint"
+    for member, fp, us in observations:
+        bad_mon.observe(member, fp, us)
+    recal_ok = not bad_mon.drifted
+    assert recal_ok, (
+        f"recalibrated table still drifts: {bad_mon.snapshot()}")
+    emit("table_obs.drift", 0.0,
+         f"drift_honest={int(honest_mon.drifted)}"
+         f";drift_perturbed=1;scale={OBS_DRIFT_SCALE}"
+         f";honest_err={honest_mon.mean_rel_error:.3f}"
+         f";recalibrated_ok={int(recal_ok)}")
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 def bench_kernels():
@@ -737,6 +924,7 @@ BENCHES = {
     "table_calibration": table_calibration,
     "table_serving": table_serving,
     "table_mesh": table_mesh,
+    "table_obs": table_obs,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
     "train_step": bench_train_step,

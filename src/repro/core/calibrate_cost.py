@@ -56,6 +56,7 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.resources import CLOCK_HZ, Footprint
+from repro.obs.trace import NOOP_SPAN, TRACER
 
 # v2 adds the collective axis (``comm_cycles`` on samples,
 # ``us_per_comm_cycle`` on fits) for mesh-sharded sites; v1 tables load
@@ -234,18 +235,23 @@ class CalibrationTable:
         """
         if min_samples is not None:
             self.min_samples = int(min_samples)
-        by_member: Dict[str, List[Tuple[float, float, float, float]]] = {}
-        for s in self.samples:
-            by_member.setdefault(s.member, []).append(
-                (s.compute_cycles, s.hbm_bytes, s.comm_cycles,
-                 s.measured_us))
-        self.fits = {m: _affine_fit(rows) for m, rows in by_member.items()
-                     if len(rows) >= self.min_samples}
-        all_rows = [(s.compute_cycles, s.hbm_bytes, s.comm_cycles,
-                     s.measured_us)
-                    for s in self.samples]
-        self.global_fit = _affine_fit(all_rows) if all_rows else None
-        self._fingerprint = None
+        with (TRACER.span("calibration.fit", "calibrate",
+                          {"samples": len(self.samples)})
+              if TRACER.enabled else NOOP_SPAN):
+            by_member: Dict[str, List[Tuple[float, float, float,
+                                            float]]] = {}
+            for s in self.samples:
+                by_member.setdefault(s.member, []).append(
+                    (s.compute_cycles, s.hbm_bytes, s.comm_cycles,
+                     s.measured_us))
+            self.fits = {m: _affine_fit(rows)
+                         for m, rows in by_member.items()
+                         if len(rows) >= self.min_samples}
+            all_rows = [(s.compute_cycles, s.hbm_bytes, s.comm_cycles,
+                         s.measured_us)
+                        for s in self.samples]
+            self.global_fit = _affine_fit(all_rows) if all_rows else None
+            self._fingerprint = None
         return self
 
     # -- prediction ---------------------------------------------------------
@@ -447,8 +453,13 @@ def measure_planned_site(site, *, interpret: bool = True,
     standalone on synthetic operands of the site's declared shapes, via
     the exact dispatch the execution layer uses (quantized wrappers for
     lowered rungs)."""
-    return timeit_us(_site_runner(site, interpret=interpret, seed=seed),
-                     warmup=warmup, repeat=repeat)
+    with (TRACER.span("calibration.measure", "calibrate",
+                      {"site": site.spec.name, "member": site.ip.name,
+                       "bits": site.precision_bits})
+          if TRACER.enabled else NOOP_SPAN):
+        return timeit_us(
+            _site_runner(site, interpret=interpret, seed=seed),
+            warmup=warmup, repeat=repeat)
 
 
 def collect_plan_samples(plans, table: Optional[CalibrationTable] = None, *,

@@ -70,6 +70,8 @@ from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 from repro.core.calibrate_cost import calibration_key, member_key
 from repro.core.ip import IPFamily, KernelIP, SiteSpec
 from repro.core.resources import Footprint, MeshSpec, ResourceBudget
+from repro.obs.audit import PlanAudit, SiteAuditRecorder, unfit_reason
+from repro.obs.trace import NOOP_SPAN, TRACER, log_event
 
 _PLAN_CACHE_MAX = 1024
 _SHARE_CACHE_MAX = 1024
@@ -151,8 +153,11 @@ def _cache_get(key) -> Optional["NetworkPlan"]:
 
 def _cache_put(key, plan: "NetworkPlan") -> None:
     if key not in _PLAN_CACHE and len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
-        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        evicted = next(iter(_PLAN_CACHE))
+        _PLAN_CACHE.pop(evicted)
         STATS.plan_evictions += 1
+        log_event("plan_cache.evict", capacity=_PLAN_CACHE_MAX,
+                  sites=len(evicted[0]), total=STATS.plan_evictions)
     _PLAN_CACHE[key] = plan
 
 
@@ -194,18 +199,33 @@ def _rank(ip: KernelIP, fp: Footprint, budget: ResourceBudget,
 
 def _select(candidates: Sequence[KernelIP], budget: ResourceBudget,
             fp_args: tuple, fp_kwargs: dict, op_bits: int,
-            calibration=None, cal_suffix: str = ""):
-    """Returns the winning (KernelIP, Footprint) pair."""
+            calibration=None, cal_suffix: str = "", recorder=None,
+            bits: int = 32):
+    """Returns the winning (KernelIP, Footprint) pair.  With a
+    ``recorder`` (``obs.audit.SiteAuditRecorder``) every candidate's
+    verdict is recorded — rejections with the concrete budget axis that
+    failed (``unfit_reason``), feasible losers with their ranking cost
+    — the raw material of ``NetworkPlan.explain()``."""
     feasible = []
     for ip in candidates:
         STATS.selector_evals += 1
         fp = ip.footprint(*fp_args, **fp_kwargs)
         if op_bits > fp.max_operand_bits:
+            if recorder is not None:
+                recorder.candidate(
+                    ip.name, bits, "rejected",
+                    f"{op_bits}-bit operands exceed member ceiling "
+                    f"int{fp.max_operand_bits}")
             continue
         if not fp.fits(budget):
+            if recorder is not None:
+                recorder.candidate(ip.name, bits, "rejected",
+                                   unfit_reason(fp, budget))
             continue
-        feasible.append((_rank(ip, fp, budget, calibration, cal_suffix),
-                         ip.name, ip, fp))
+        rank = _rank(ip, fp, budget, calibration, cal_suffix)
+        if recorder is not None:
+            recorder.candidate(ip.name, bits, "feasible", cost=rank[1])
+        feasible.append((rank, ip.name, ip, fp))
     if not feasible:
         raise ValueError(
             "no feasible IP under budget "
@@ -226,7 +246,8 @@ def _width_budget(budget: ResourceBudget, spec: SiteSpec,
     return dataclasses.replace(budget, precision_bits=bits)
 
 
-def _select_site(spec: SiteSpec, budget: ResourceBudget, calibration=None):
+def _select_site(spec: SiteSpec, budget: ResourceBudget, calibration=None,
+                 recorder=None):
     """Select for one site, descending its precision ladder on failure.
 
     Widths are tried native-first (precision is only sacrificed when the
@@ -234,23 +255,31 @@ def _select_site(spec: SiteSpec, budget: ResourceBudget, calibration=None):
     selection race at the lowered operand width, which both shrinks
     footprints (narrower itemsize) and unlocks width-capped members.
     Returns ``(KernelIP, Footprint, bits)``; raises the family-standard
-    error only after the narrowest rung fails.
+    error only after the narrowest rung fails.  A ``recorder`` collects
+    every rung's candidate verdicts for the plan decision audit.
     """
     fam = _get_family(spec.family)
     widths = spec.widths()
     if not fam.quantizable:
         widths = widths[:1]
+    span = (TRACER.span("select", "plan", {"site": spec.name})
+            if TRACER.enabled else NOOP_SPAN)
     err = None
-    for bits in widths:
-        req = fam.plan_site(spec.at_precision(bits))
-        suffix = f"@int{bits}" if bits < spec.native_bits else ""
-        try:
-            ip, fp = _select(req.candidates, _width_budget(budget, spec, bits),
-                             req.fp_args, dict(req.fp_kwargs), req.op_bits,
-                             calibration, suffix)
-            return ip, fp, bits
-        except ValueError as e:
-            err = err or e      # surface the native-width failure
+    with span:
+        for bits in widths:
+            req = fam.plan_site(spec.at_precision(bits))
+            suffix = f"@int{bits}" if bits < spec.native_bits else ""
+            try:
+                ip, fp = _select(req.candidates,
+                                 _width_budget(budget, spec, bits),
+                                 req.fp_args, dict(req.fp_kwargs),
+                                 req.op_bits, calibration, suffix,
+                                 recorder=recorder, bits=bits)
+                if recorder is not None:
+                    recorder.chose(ip.name, bits)
+                return ip, fp, bits
+            except ValueError as e:
+                err = err or e      # surface the native-width failure
     raise err
 
 
@@ -333,6 +362,14 @@ class NetworkPlan:
     # sharded sites; execution routes them through shard_map
     # (distributed/shard_exec.py).
     mesh: Optional[MeshSpec] = None
+    # The decision audit the planner recorded while building this plan:
+    # per-site candidate sets with rejection reasons, ladder-descent
+    # notes, and plan-level events (fusion/shard/repair).  Excluded from
+    # equality — two plans that map identically ARE the same plan even
+    # if one was deserialized without its audit.  Rendered by
+    # ``explain()`` (docs/adaptive_ips.md, "Observability contract").
+    audit: Optional[PlanAudit] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def site(self, name: str) -> PlannedSite:
         for s in self.sites:
@@ -424,12 +461,25 @@ class NetworkPlan:
                      f"cyc={self.total_cycles:.3e}")
         return "\n".join(lines)
 
+    def explain(self) -> str:
+        """Why this plan: per-site chosen member, every rejected
+        candidate with the concrete budget axis that failed, ladder-
+        descent notes, and the plan-level fusion/shard/repair events —
+        the decision audit rendered for humans.  A plan that carries no
+        audit (deserialized from pre-audit JSON) says so instead of
+        pretending."""
+        if self.audit is None:
+            return "no audit recorded for this plan"
+        return self.audit.render()
+
     # -- serialization ------------------------------------------------------
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps({
             "budget": dataclasses.asdict(self.budget),
             "mesh": (dataclasses.asdict(self.mesh)
                      if self.mesh is not None else None),
+            "audit": (self.audit.to_dict()
+                      if self.audit is not None else None),
             "sites": [{
                 "spec": s.spec.to_dict(),
                 "ip": s.ip.name,
@@ -459,9 +509,11 @@ class NetworkPlan:
                 footprint=Footprint(**r["footprint"]),
             ))
         mesh = d.get("mesh")
+        audit = d.get("audit")
         return cls(budget=ResourceBudget(**d["budget"]),
                    sites=tuple(sites),
-                   mesh=MeshSpec(**mesh) if mesh else None)
+                   mesh=MeshSpec(**mesh) if mesh else None,
+                   audit=PlanAudit.from_dict(audit) if audit else None)
 
 
 # ---------------------------------------------------------------------------
@@ -558,8 +610,12 @@ def plan_network(specs: Iterable[SiteSpec],
         STATS.plan_hits += 1
         return cached
     STATS.plan_misses += 1
-    plan = _plan_uncached(key[0], budget, fuse=fuse, calibration=calibration,
-                          mesh=mesh)
+    with (TRACER.span("plan_network", "plan",
+                      {"sites": len(key[0]), "fuse": fuse,
+                       "mesh_devices": mesh.devices if mesh else 1})
+          if TRACER.enabled else NOOP_SPAN):
+        plan = _plan_uncached(key[0], budget, fuse=fuse,
+                              calibration=calibration, mesh=mesh)
     _cache_put(key, plan)
     return plan
 
@@ -633,8 +689,12 @@ def replan(specs: Iterable[SiteSpec],
     STATS.plan_misses += 1
     fell_cold = False
     try:
-        plan = _assign_with_repair(eff, budget, shares,
-                                   calibration=calibration)
+        with (TRACER.span("replan", "plan", {"sites": len(eff)})
+              if TRACER.enabled else NOOP_SPAN):
+            plan = _assign_with_repair(
+                eff, budget, shares, calibration=calibration,
+                events=["replan fast path: assignment from memoized "
+                        "cost shares (no full-budget baseline)"])
         STATS.replan_fast += 1
     except ValueError:
         STATS.replan_cold += 1
@@ -686,29 +746,38 @@ def plan_single(spec: SiteSpec,
 
 def _try_assign(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
                 fractions: Sequence[float], calibration=None):
-    planned, failed = [], []
+    """One assignment pass; returns (planned, failed, audits) where
+    ``audits`` carries one ``SiteAudit`` per *planned* site (None for
+    failed ones — a failed pass's audits die with it; the repair pass
+    records the audits the final plan ships)."""
+    planned, failed, audits = [], [], []
     for spec, frac in zip(specs, fractions):
+        rec = SiteAuditRecorder(spec.name, spec.family, spec.native_bits)
         try:
             ip, fp, bits = _select_site(spec, budget.scaled(frac),
-                                        calibration)
+                                        calibration, recorder=rec)
             planned.append(PlannedSite(spec=spec, ip=ip, footprint=fp,
                                        fraction=frac,
                                        precision_bits=bits))
+            audits.append(rec.finish(ip.name, bits, frac))
         except ValueError:
             planned.append(None)
+            audits.append(None)
             failed.append(spec.name)
-    return planned, failed
+    return planned, failed, audits
 
 
 def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
                         shares: Sequence[float],
-                        calibration=None) -> NetworkPlan:
+                        calibration=None, events=None) -> NetworkPlan:
     """Slice assignment under cost ``shares``, with the greedy repair:
     if any site has no feasible member under its proportional slice,
     every site is floored at the minimal slice its cheapest member (at
     its cheapest legal width) needs and only the surplus follows the
-    shares."""
-    planned, failed = _try_assign(specs, budget, shares, calibration)
+    shares.  ``events`` (a list) accumulates plan-level audit events;
+    the built plan carries the full ``PlanAudit``."""
+    events = events if events is not None else []
+    planned, failed, audits = _try_assign(specs, budget, shares, calibration)
     if failed:
         needs = [_site_need(s, budget) for s in specs]
         total_need = sum(needs)
@@ -721,12 +790,18 @@ def _assign_with_repair(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
         surplus = 1.0 - total_need
         fractions = [need + surplus * share
                      for need, share in zip(needs, shares)]
-        planned, failed = _try_assign(specs, budget, fractions, calibration)
+        events.append(
+            f"partition repair: sites {failed} infeasible at proportional "
+            f"shares; floored every site at its minimal need "
+            f"(total {total_need:.3f}) and redistributed the surplus")
+        planned, failed, audits = _try_assign(specs, budget, fractions,
+                                              calibration)
         if failed:  # pragma: no cover — needs floor guarantees feasibility
             raise ValueError(
                 f"budget partition repair failed for sites {failed} under "
                 f"{budget}")
-    return NetworkPlan(budget=budget, sites=tuple(planned))
+    audit = PlanAudit(sites=tuple(audits), events=tuple(events))
+    return NetworkPlan(budget=budget, sites=tuple(planned), audit=audit)
 
 
 # ---------------------------------------------------------------------------
@@ -764,7 +839,8 @@ def _substitute(specs: Tuple[SiteSpec, ...], groups) -> Tuple[SiteSpec, ...]:
     return tuple(out)
 
 
-def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None):
+def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None,
+                 events=None):
     """The fusion decision at full budget: substitute a group's fused
     site when the fused member is feasible AND its combined footprint
     prices at or below the unfused chain's cheapest members (or the
@@ -778,9 +854,15 @@ def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None):
     the measurements say the one-launch member is the slower path."""
     chosen = []
     for start, length, fspec in _fusion_groups(specs):
+        chain = [s.name for s in specs[start:start + length]]
         try:
             fip, ffp, fbits = select(fspec)
         except ValueError:
+            if events is not None:
+                events.append(
+                    f"fusion rejected: {fspec.name} has no feasible "
+                    f"member at the full budget; chain {chain} "
+                    f"stays unfused")
             continue
         fcost = _site_cost(fip, ffp, fbits, fspec, calibration)
         try:
@@ -792,6 +874,15 @@ def _fused_specs(specs: Tuple[SiteSpec, ...], select, calibration=None):
             ucost = None
         if ucost is None or fcost <= ucost:
             chosen.append((start, length, fspec))
+            if events is not None:
+                why = ("unfused chain infeasible" if ucost is None else
+                       f"cost {fcost:.3e} <= unfused chain {ucost:.3e}")
+                events.append(
+                    f"fusion: {fspec.name} replaces {chain} ({why})")
+        elif events is not None:
+            events.append(
+                f"fusion rejected: {fspec.name} costs {fcost:.3e} > "
+                f"unfused chain {ucost:.3e}; chain {chain} stays unfused")
     return _substitute(specs, chosen), chosen
 
 
@@ -816,7 +907,9 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
             memo[spec] = _select_site(spec, budget, calibration)
         return memo[spec]
 
-    eff, chosen = (_fused_specs(specs, select_full, calibration) if fuse
+    events: list = []
+    eff, chosen = (_fused_specs(specs, select_full, calibration,
+                                events=events) if fuse
                    else (specs, []))
     while True:
         try:
@@ -827,16 +920,18 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
                 # longer binds).
                 from repro.core.shard import plan_shard_decisions
                 shardings = plan_shard_decisions(
-                    eff, budget, mesh, select_full, calibration)
+                    eff, budget, mesh, select_full, calibration,
+                    events=events)
                 plan = _plan_effective(
                     tuple(sh.spec for sh in shardings), budget,
-                    select_full, calibration=calibration, calkey=calkey)
+                    select_full, calibration=calibration, calkey=calkey,
+                    events=events)
                 plan = _apply_shardings(plan, eff, shardings, budget,
                                         mesh)
             else:
                 plan = _plan_effective(eff, budget, select_full,
                                        calibration=calibration,
-                                       calkey=calkey)
+                                       calkey=calkey, events=events)
                 if mesh is not None:
                     plan = dataclasses.replace(plan, mesh=mesh)
             break
@@ -853,6 +948,10 @@ def _plan_uncached(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
             needs = [(_site_need(f, budget), idx)
                      for idx, (_, _, f) in enumerate(chosen)]
             _, drop = max(needs)
+            events.append(
+                f"fusion fallback: unfused {chosen[drop][2].name} after "
+                f"partition failure (largest minimal slice "
+                f"{needs[drop][0]:.3f})")
             chosen = chosen[:drop] + chosen[drop + 1:]
             eff = _substitute(specs, chosen)
     if fuse:
@@ -883,11 +982,13 @@ def _apply_shardings(plan: NetworkPlan, eff: Tuple[SiteSpec, ...],
                 shard_degree=sh.degree))
         else:
             sites.append(ps)
-    return NetworkPlan(budget=budget, sites=tuple(sites), mesh=mesh)
+    # dataclasses.replace keeps the audit the assignment pass recorded.
+    return dataclasses.replace(plan, sites=tuple(sites), mesh=mesh)
 
 
 def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
-                    select=None, calibration=None, calkey=None) -> NetworkPlan:
+                    select=None, calibration=None, calkey=None,
+                    events=None) -> NetworkPlan:
     # 1) Full-budget baseline: cost shares (raises "no feasible IP" for a
     #    site that cannot run even with everything — after descending its
     #    precision ladder, when it has one).
@@ -909,7 +1010,8 @@ def _plan_effective(specs: Tuple[SiteSpec, ...], budget: ResourceBudget,
             and len(_SHARE_CACHE) >= _SHARE_CACHE_MAX):
         _SHARE_CACHE.pop(next(iter(_SHARE_CACHE)))
     _SHARE_CACHE[(specs, calkey)] = shares
-    return _assign_with_repair(specs, budget, shares, calibration)
+    return _assign_with_repair(specs, budget, shares, calibration,
+                               events=events)
 
 
 # ---------------------------------------------------------------------------

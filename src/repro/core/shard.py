@@ -45,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.core.ip import SiteSpec
 from repro.core.resources import MeshSpec, ResourceBudget
+from repro.obs.trace import NOOP_SPAN, TRACER
 
 # A tensor layout as the planner sees it: ("full", 1) replicated on every
 # device, ("batch", d) split on the leading dim, ("chan", d) split on the
@@ -243,7 +244,8 @@ def boundary_comm_cycles(mesh: MeshSpec, produced: Tuple[str, int],
 # ---------------------------------------------------------------------------
 def plan_shard_decisions(specs: Sequence[SiteSpec], budget: ResourceBudget,
                          mesh: MeshSpec, select=None,
-                         calibration=None) -> Tuple[SiteSharding, ...]:
+                         calibration=None,
+                         events=None) -> Tuple[SiteSharding, ...]:
     """Choose, per site, between replicating and sharding — the mesh
     tentpole's pricing pass (docs/adaptive_ips.md, "Sharding contract").
 
@@ -262,8 +264,22 @@ def plan_shard_decisions(specs: Sequence[SiteSpec], budget: ResourceBudget,
     narrows it).  Returns one ``SiteSharding`` per site, comm already
     apportioned; with ``mesh.devices == 1`` every decision is the
     trivial replicated one.
+
+    ``events`` (a list, when given) receives one plan-audit line per
+    non-trivial decision: a ``shard:`` line for every split taken and a
+    ``shard refusal:`` line — with the per-option prices — for every
+    site that had a split available and stayed replicated.
     """
     specs = tuple(specs)
+    with (TRACER.span("plan_shard_decisions", "shard",
+                      {"sites": len(specs), "devices": mesh.devices})
+          if TRACER.enabled else NOOP_SPAN):
+        return _plan_shard_decisions(specs, budget, mesh, select,
+                                     calibration, events)
+
+
+def _plan_shard_decisions(specs, budget, mesh, select, calibration,
+                          events):
     if select is None:
         from repro.core.plan import _select_site
 
@@ -343,6 +359,25 @@ def plan_shard_decisions(specs: Sequence[SiteSpec], budget: ResourceBudget,
             decs = decs[:-1] + (dataclasses.replace(
                 last, comm_cycles=last.comm_cycles + egress),)
             best = (total, decs)
+    if events is not None:
+        for spec, opts, dec in zip(specs, options, best[1]):
+            if dec.degree > 1:
+                events.append(
+                    f"shard: {spec.name} split {dec.axis}x{dec.degree} "
+                    f"(comm {dec.comm_cycles:.3e} cycles)")
+            elif len(opts) > 1:
+                # A split was on the table and the DP kept the site
+                # replicated — the refusal the audit must explain.
+                priced = "; ".join(
+                    f"{axis}x{deg} compute {ccost:.3e} + comm "
+                    f"{scomm:.3e}"
+                    for axis, deg, _, _, _, scomm, ccost in opts
+                    if deg > 1)
+                repl = next(ccost for axis, deg, *_, ccost in opts
+                            if deg == 1)
+                events.append(
+                    f"shard refusal: {spec.name} stays replicated "
+                    f"(compute {repl:.3e}) over {priced}")
     return best[1]
 
 

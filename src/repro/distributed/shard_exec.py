@@ -40,6 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.plan import NetworkPlan, PlannedSite
 from repro.core.shard import FULL, output_layout, required_input_layout
+from repro.obs.trace import NOOP_SPAN, TRACER
 
 _CHAIN_FAMILIES = ("conv2d", "pool2d", "activation", "cnn_fused")
 
@@ -181,4 +182,9 @@ def apply_plan_sharded(plan: NetworkPlan, x: jnp.ndarray,
 
     fn = shard_map(device_fn, mesh=mesh, in_specs=(P(), P()),
                    out_specs=P(), check_rep=False)
-    return fn(x, dict(weights))
+    with (TRACER.span("shard_exec.apply", "collective",
+                      {"devices": d, "axis": axis,
+                       "comm_cycles": sum(s.footprint.comm_cycles
+                                          for s in plan.sites)})
+          if TRACER.enabled else NOOP_SPAN):
+        return fn(x, dict(weights))

@@ -34,6 +34,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from repro.core.resources import MeshSpec, ResourceBudget
+from repro.obs.trace import NOOP_SPAN, TRACER, log_event
 
 POLICIES = ("demand", "static")
 
@@ -151,6 +152,12 @@ class BudgetArbiter:
         """
         if not self._floors:
             return {}
+        with (TRACER.span("arbiter.split", "arbiter",
+                          {"tenants": len(self._floors)})
+              if TRACER.enabled else NOOP_SPAN):
+            return self._split()
+
+    def _split(self) -> Dict[str, TenantShare]:
         a = self.demand_alpha
         for name, pend in self._pending.items():
             self._demand[name] = (1 - a) * self._demand[name] + a * pend
@@ -161,10 +168,15 @@ class BudgetArbiter:
             self._granted = dict(targets)
             if was_granted:
                 self.rebalances += 1
+                log_event("arbiter.rebalance", cause="tenant_set",
+                          tenants=len(targets), total=self.rebalances)
         elif any(abs(targets[m] - self._granted[m])
                  > self.rebalance_threshold for m in targets):
             self._granted = dict(targets)
             self.rebalances += 1
+            log_event("arbiter.rebalance", cause="drift",
+                      threshold=self.rebalance_threshold,
+                      tenants=len(targets), total=self.rebalances)
         self._devices = self._device_grants(self._granted)
         return {m: TenantShare(name=m, demand=self._demand[m],
                                floor=self._floors[m],

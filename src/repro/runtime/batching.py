@@ -43,8 +43,13 @@ class ShapeBucketQueue:
 
     def __init__(self):
         self._buckets: Dict[Tuple, Deque[Request]] = {}
+        # Lifetime counters (never reset) for metrics exposition.
+        self.pushes = 0
+        self.pops = 0
+        self.popped_requests = 0
 
     def push(self, req: Request) -> None:
+        self.pushes += 1
         self._buckets.setdefault(req.bucket_key, deque()).append(req)
 
     def keys(self) -> Tuple[Tuple, ...]:
@@ -60,7 +65,17 @@ class ShapeBucketQueue:
         batch = [q.popleft() for _ in range(min(max_batch, len(q)))]
         if not q:
             self._buckets.pop(key, None)
+        self.pops += 1
+        self.popped_requests += len(batch)
         return batch
+
+    def stats(self) -> Dict[str, int]:
+        """Lifetime counters: requests pushed, batches popped, requests
+        popped, plus the current depth and live bucket count."""
+        return {"pushes": self.pushes, "pops": self.pops,
+                "popped_requests": self.popped_requests,
+                "pending": len(self),
+                "buckets": len(self.keys())}
 
     def pending(self, tenant: str) -> int:
         return sum(len(q) for (t, _, _), q in self._buckets.items()

@@ -13,6 +13,8 @@ from typing import Callable, List, Optional
 
 import jax
 
+from repro.obs.trace import log_event
+
 
 # ---------------------------------------------------------------------------
 # Watchdog: detects a hung/crashed step and triggers restart-from-ckpt.
@@ -62,6 +64,7 @@ class Watchdog:
             if (time.monotonic() - self._last_beat > self.timeout_s
                     and not self._stop.is_set()):
                 self._fired = True
+                log_event("watchdog.timeout", timeout_s=self.timeout_s)
                 self.on_timeout()
                 self._last_beat = time.monotonic()
 

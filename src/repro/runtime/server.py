@@ -40,6 +40,7 @@ from repro.core.plan import (STATS, network_min_fraction, plan_network,
                              replan)
 from repro.core.resources import MeshSpec, ResourceBudget
 from repro.models.frontends import apply_cnn_frontend, cnn_frontend_site_specs
+from repro.obs.trace import NOOP_SPAN, TRACER
 from repro.runtime.arbiter import BudgetArbiter, TenantShare
 from repro.runtime.batching import Request, ShapeBucketQueue
 from repro.runtime.telemetry import TenantTelemetry
@@ -237,6 +238,16 @@ class AdaptiveServer:
         return out
 
     def _execute(self, batch: List[Request]) -> List[Completion]:
+        # Tracing contract: the disabled path costs one attribute read
+        # and one branch per span site — no argument dicts, no span
+        # objects (NOOP_SPAN is the shared singleton).
+        with (TRACER.span("serve.execute", "serving",
+                          {"tenant": batch[0].tenant,
+                           "batch": len(batch)})
+              if TRACER.enabled else NOOP_SPAN):
+            return self._execute_batch(batch)
+
+    def _execute_batch(self, batch: List[Request]) -> List[Completion]:
         tenant = self.tenants[batch[0].tenant]
         xb = jnp.stack([r.x for r in batch])
         if self.mesh is not None:
@@ -271,19 +282,31 @@ class AdaptiveServer:
                     self._tile_cache.pop(next(iter(self._tile_cache)))
                 self._tile_cache[tkey] = tile_overrides
         quant_report = {} if (tenant.ladder and tenant.measure_quant) else None
-        if self._shardable(plan, xb):
-            y = self._run_frontend_sharded(tenant, xb, plan,
-                                           tile_overrides=tile_overrides)
-        else:
-            y = apply_cnn_frontend(tenant.params, xb, network=plan,
-                                   pool_window=tenant.pool_window,
-                                   activation=tenant.activation,
-                                   interpret=self.interpret,
-                                   ladder=tenant.ladder,
-                                   quant_report=quant_report,
-                                   tile_overrides=tile_overrides,
-                                   fuse=self.fuse)
+        sharded = self._shardable(plan, xb)
+        with (TRACER.span("kernel", "kernel",
+                          {"tenant": tenant.name,
+                           "launches": plan.total_launches,
+                           "sharded": sharded})
+              if TRACER.enabled else NOOP_SPAN):
+            if sharded:
+                y = self._run_frontend_sharded(
+                    tenant, xb, plan, tile_overrides=tile_overrides)
+            else:
+                y = apply_cnn_frontend(tenant.params, xb, network=plan,
+                                       pool_window=tenant.pool_window,
+                                       activation=tenant.activation,
+                                       interpret=self.interpret,
+                                       ladder=tenant.ladder,
+                                       quant_report=quant_report,
+                                       tile_overrides=tile_overrides,
+                                       fuse=self.fuse)
         start = max(tenant.lane_free, max(r.arrival for r in batch))
+        if TRACER.enabled:
+            TRACER.instant(
+                "batch.queue_wait", "serving",
+                {"tenant": tenant.name,
+                 "max_wait_cycles":
+                     start - min(r.arrival for r in batch)})
         finish = start + plan.calibrated_cycles(self.calibration)
         tenant.lane_free = finish
         latencies = [finish - r.arrival for r in batch]
@@ -363,6 +386,19 @@ class AdaptiveServer:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def queue_stats(self) -> Dict[str, int]:
+        """Lifetime counters of the shape-bucket queue."""
+        return self._queue.stats()
+
+    def metrics(self, registry=None):
+        """This server's state folded into a ``MetricsRegistry``
+        (``repro.obs.metrics``): planner/cache counters, event log,
+        tracer stats, arbiter rebalances, and per-tenant telemetry
+        including shard degree and comm-cycles share.  Render with
+        ``.render()`` (Prometheus text) or ``.snapshot()``."""
+        from repro.obs.metrics import system_metrics
+        return system_metrics(server=self, registry=registry)
 
     def telemetry(self) -> Dict[str, dict]:
         """Per-tenant snapshot: latency percentiles (est-cycles),

@@ -6,12 +6,20 @@ are comparable without wall-clock noise from the interpret-mode CPU
 substrate.  Precision mix counts planned-site executions per operand
 width (how often the tenant actually served lowered), and the plan-cache
 columns are windowed deltas of ``core.plan.plan_cache_stats``.
+
+Sharding columns: ``shard_degree_mix`` counts planned-site executions
+per shard degree (degree 1 = replicated), ``shard_degree`` is the
+widest degree the tenant has served, and ``comm_cycles_share`` is the
+fraction of the tenant's total estimated cycles spent in collectives —
+how much of a mesh tenant's bill is traffic, not compute.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
 from typing import Deque, Dict, List
+
+from repro.obs.metrics import percentile
 
 # Percentiles are computed over the most recent window rather than the
 # full request history, so a long-lived server's memory stays bounded
@@ -31,6 +39,10 @@ class TenantTelemetry:
     latencies: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
     precision_mix: Dict[int, int] = dataclasses.field(default_factory=dict)
+    shard_degree_mix: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    comm_cycles_sum: float = 0.0
+    est_cycles_sum: float = 0.0
     replans: int = 0            # grant moves that forced a re-plan
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
@@ -46,6 +58,11 @@ class TenantTelemetry:
         for site in plan.sites:
             bits = site.precision_bits
             self.precision_mix[bits] = self.precision_mix.get(bits, 0) + 1
+            deg = getattr(site, "shard_degree", 1)
+            self.shard_degree_mix[deg] = (
+                self.shard_degree_mix.get(deg, 0) + 1)
+            self.comm_cycles_sum += site.footprint.comm_cycles
+            self.est_cycles_sum += site.footprint.est_cycles
         self.plan_cache_hits += cache_hits
         self.plan_cache_misses += cache_misses
         self.max_quant_rel_err = max(self.max_quant_rel_err, quant_err)
@@ -62,18 +79,23 @@ class TenantTelemetry:
         low = sum(n for b, n in self.precision_mix.items() if b < 32)
         return low / total if total else 0.0
 
+    @property
+    def shard_degree(self) -> int:
+        """Widest shard degree this tenant has served (1 = replicated)."""
+        return max(self.shard_degree_mix, default=1)
+
+    @property
+    def comm_cycles_share(self) -> float:
+        """Collective cycles / total estimated cycles served."""
+        return (self.comm_cycles_sum / self.est_cycles_sum
+                if self.est_cycles_sum else 0.0)
+
     def latency_percentile(self, q: float) -> float:
         """q-th percentile (0..100) of request latency in est-cycles,
-        over the most recent ``LATENCY_WINDOW`` requests."""
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        if len(xs) == 1:
-            return xs[0]
-        pos = (q / 100.0) * (len(xs) - 1)
-        lo = int(pos)
-        hi = min(lo + 1, len(xs) - 1)
-        return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+        over the most recent ``LATENCY_WINDOW`` requests.  Delegates to
+        the shared estimator (``repro.obs.metrics.percentile``) so the
+        metrics exposition and this snapshot can never disagree."""
+        return percentile(self.latencies, q)
 
     def snapshot(self) -> dict:
         cache_lookups = self.plan_cache_hits + self.plan_cache_misses
@@ -86,6 +108,10 @@ class TenantTelemetry:
             "p95_cycles": self.latency_percentile(95),
             "precision_mix": dict(sorted(self.precision_mix.items())),
             "lowered_fraction": self.lowered_fraction,
+            "shard_degree": self.shard_degree,
+            "shard_degree_mix": dict(sorted(
+                self.shard_degree_mix.items())),
+            "comm_cycles_share": self.comm_cycles_share,
             "replans": self.replans,
             "plan_cache_hits": self.plan_cache_hits,
             "plan_cache_misses": self.plan_cache_misses,

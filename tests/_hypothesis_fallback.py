@@ -44,9 +44,19 @@ def floats(min_value=0.0, max_value=1.0, **_kw):
     return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
 
 
+def lists(elements, min_size=0, max_size=None, **_kw):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rnd):
+        n = rnd.randint(min_size, hi)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
 strategies = types.SimpleNamespace(
     integers=integers, booleans=booleans, sampled_from=sampled_from,
-    floats=floats)
+    floats=floats, lists=lists)
 
 
 def settings(**kwargs):

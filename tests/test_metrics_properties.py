@@ -1,0 +1,77 @@
+"""Property tests for the shared percentile estimator
+(``repro.obs.metrics.percentile``) — the single rule serving telemetry
+(``TenantTelemetry.latency_percentile``), the metrics ``Histogram``,
+and the Prometheus exposition all price quantiles by.  If this
+estimator and numpy's linear-interpolation percentile ever disagree,
+dashboards and telemetry snapshots report different p95s for the same
+window.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback shim (``tests/_hypothesis_fallback.py`` via ``conftest.py``).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.metrics import Histogram, percentile
+from repro.runtime.telemetry import TenantTelemetry
+
+_VALUES = st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                   min_size=1, max_size=40)
+_Q = st.floats(min_value=0.0, max_value=100.0)
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES, q=_Q)
+def test_percentile_within_data_range(xs, q):
+    p = percentile(xs, q)
+    assert min(xs) <= p <= max(xs)
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES, q1=_Q, q2=_Q)
+def test_percentile_monotone_in_q(xs, q1, q2):
+    lo, hi = sorted((q1, q2))
+    assert percentile(xs, lo) <= percentile(xs, hi)
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES)
+def test_percentile_endpoints_are_min_and_max(xs):
+    assert percentile(xs, 0) == pytest.approx(min(xs))
+    assert percentile(xs, 100) == pytest.approx(max(xs))
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES, q=_Q)
+def test_percentile_matches_numpy_linear(xs, q):
+    want = float(np.percentile(np.asarray(xs, dtype=np.float64), q,
+                               method="linear"))
+    assert percentile(xs, q) == pytest.approx(want, rel=1e-9, abs=1e-6)
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES, q=_Q)
+def test_percentile_invariant_to_input_order(xs, q):
+    assert percentile(xs, q) == percentile(list(reversed(xs)), q)
+
+
+@settings(max_examples=50)
+@given(xs=_VALUES, q=_Q)
+def test_telemetry_and_histogram_agree_with_estimator(xs, q):
+    # One window, three consumers, one answer.
+    tel = TenantTelemetry(name="t", max_batch=4)
+    tel.latencies.extend(xs)
+    hist = Histogram()
+    hist.observe_many(xs)
+    want = percentile(xs, q)
+    assert tel.latency_percentile(q) == pytest.approx(want)
+    assert hist.quantile(q / 100.0) == pytest.approx(want)
+
+
+def test_percentile_edge_cases():
+    assert percentile([], 50) == 0.0
+    assert percentile([7.0], 99) == 7.0
+    # out-of-range q clamps instead of raising
+    assert percentile([1.0, 2.0], -5) == 1.0
+    assert percentile([1.0, 2.0], 200) == 2.0

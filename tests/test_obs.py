@@ -1,0 +1,427 @@
+"""Cross-layer observability (src/repro/obs): span tracer contracts
+(thread safety, allocation-free disabled path, Chrome trace-event JSON
+schema), the always-on event log and its runtime routing (watchdog
+timeouts, plan-cache evictions, arbiter rebalances), plan decision
+audits with concrete rejection reasons, the metrics registry and its
+Prometheus exposition, telemetry shard columns, and the calibration
+drift monitor's flag/recalibrate loop."""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.calibrate_cost import CalibrationTable
+from repro.core.ip import SiteSpec
+from repro.core.plan import (NetworkPlan, clear_plan_cache, plan_network,
+                             replan)
+from repro.core.resources import Footprint, ResourceBudget, hbm_cycles
+from repro.models.blocks import cnn_block_site_specs
+from repro.models.frontends import init_cnn_frontend
+from repro.obs import (EVENTS, NOOP_SPAN, TRACER, DriftMonitor,
+                       MetricsRegistry, PlanAudit, log_event,
+                       mis_scaled_table, percentile, system_metrics,
+                       unfit_reason)
+from repro.runtime import AdaptiveServer
+from repro.runtime.fault_tolerance import Watchdog
+from repro.runtime.telemetry import TenantTelemetry
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with the tracer off and both global
+    buffers empty — the singletons must not leak across tests."""
+    TRACER.disable()
+    TRACER.clear()
+    EVENTS.clear()
+    yield
+    TRACER.disable()
+    TRACER.clear()
+    EVENTS.clear()
+
+
+def _block_specs(site="obs"):
+    specs, _ = cnn_block_site_specs((2, 16, 16, 4), (3, 3, 4, 16),
+                                    x_dtype="float32", site=site)
+    return tuple(specs)
+
+
+# --------------------------------------------------------------------------
+# Span tracer
+# --------------------------------------------------------------------------
+def test_tracer_disabled_path_is_noop_singleton():
+    assert not TRACER.enabled
+    # The disabled path hands back the one shared object — nothing to
+    # allocate, nothing recorded.
+    assert TRACER.span("anything", "cat", {"k": 1}) is NOOP_SPAN
+    with TRACER.span("x"):
+        pass
+    TRACER.instant("marker")
+    assert TRACER.events() == []
+    assert TRACER.stats()["events"] == 0
+
+
+def test_tracer_records_spans_and_instants():
+    TRACER.enable()
+    with TRACER.span("work", "test", {"n": 3}):
+        TRACER.instant("tick", "test")
+    TRACER.disable()
+    events = TRACER.events()
+    assert [e["ph"] for e in events] == ["i", "X"]  # span closes after
+    span = events[1]
+    assert span["name"] == "work" and span["cat"] == "test"
+    assert span["dur"] >= 0.0
+    assert span["args"] == {"n": 3}
+    assert span["tid"] == threading.get_ident()
+
+
+def test_tracer_thread_safety():
+    TRACER.enable()
+    # The barrier holds all 8 threads alive at once: thread idents stay
+    # distinct (Python reuses idents of finished threads).
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait()
+        for _ in range(200):
+            with TRACER.span("w", "threads"):
+                pass
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    TRACER.disable()
+    events = TRACER.events()
+    assert len(events) == 8 * 200
+    assert len({e["tid"] for e in events}) == 8
+    json.loads(TRACER.export_chrome_trace())    # buffer survived the race
+
+
+def test_chrome_trace_export_schema():
+    TRACER.enable()
+    with TRACER.span("a", "plan"):
+        pass
+    TRACER.instant("b", "events", {"x": 1})
+    TRACER.disable()
+    doc = json.loads(TRACER.export_chrome_trace())
+    assert doc["displayTimeUnit"] == "ms"
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in ("X", "i")
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert isinstance(ev["ts"], float) and ev["ts"] >= 0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+
+
+def test_tracer_buffer_bounds_and_counts_drops():
+    from repro.obs.trace import SpanTracer
+    t = SpanTracer(max_events=3)
+    t.enable()
+    for _ in range(5):
+        with t.span("s"):
+            pass
+    assert t.stats()["events"] == 3
+    assert t.stats()["dropped"] == 2
+    doc = json.loads(t.export_chrome_trace())
+    assert doc["otherData"]["dropped_events"] == 2
+
+
+# --------------------------------------------------------------------------
+# Event log + runtime routing
+# --------------------------------------------------------------------------
+def test_watchdog_timeout_routes_to_event_log():
+    fired = threading.Event()
+    wd = Watchdog(timeout_s=0.05, on_timeout=fired.set)
+    wd.start()
+    assert fired.wait(timeout=5.0)
+    wd.stop()
+    events = EVENTS.recent(kind="watchdog.timeout")
+    assert events and events[-1]["timeout_s"] == pytest.approx(0.05)
+
+
+def test_plan_cache_eviction_routes_to_event_log():
+    clear_plan_cache()
+    specs = _block_specs()
+    old_max = plan_mod._PLAN_CACHE_MAX
+    plan_mod._PLAN_CACHE_MAX = 1
+    try:
+        plan_network(specs, ResourceBudget())
+        plan_network(specs, ResourceBudget(vmem_bytes=2 * 2**20))
+    finally:
+        plan_mod._PLAN_CACHE_MAX = old_max
+    evs = EVENTS.recent(kind="plan_cache.evict")
+    assert evs and evs[-1]["capacity"] == 1
+
+
+def test_arbiter_rebalance_routes_to_event_log():
+    from repro.runtime import BudgetArbiter
+    arb = BudgetArbiter(ResourceBudget(), rebalance_threshold=0.01,
+                        demand_alpha=1.0)
+    arb.register("a")
+    arb.register("b")
+    arb.split()                         # first grant: no rebalance
+    arb.observe("a", 1000.0)
+    arb.split()                         # demand skew past threshold
+    assert arb.rebalances == 1
+    evs = EVENTS.recent(kind="arbiter.rebalance")
+    assert evs and evs[-1]["cause"] == "drift"
+
+
+def test_event_log_mirrors_into_enabled_tracer():
+    TRACER.enable()
+    EVENTS.log("test.kind", value=7)
+    TRACER.disable()
+    (ev,) = TRACER.events()
+    assert ev["name"] == "test.kind" and ev["ph"] == "i"
+    assert ev["args"] == {"value": 7}
+
+
+# --------------------------------------------------------------------------
+# Plan decision audit
+# --------------------------------------------------------------------------
+def test_unfit_reason_names_the_failing_axis():
+    fp = Footprint(vmem_bytes=700 * 1024, hbm_bytes=1024, mxu_passes=0,
+                   vpu_ops=100, est_cycles=1000.0)
+    reason = unfit_reason(fp, ResourceBudget(vmem_bytes=600 * 1024))
+    assert "vmem" in reason and "700KiB" in reason and "600KiB" in reason
+    reason = unfit_reason(
+        Footprint(vmem_bytes=10, hbm_bytes=10, mxu_passes=4, vpu_ops=0,
+                  est_cycles=1.0),
+        ResourceBudget(mxu_available=False))
+    assert "mxu_available=False" in reason
+
+
+def test_plan_audit_names_concrete_rejection_reasons():
+    clear_plan_cache()
+    specs = _block_specs()
+    ample = plan_network(specs, ResourceBudget())
+    assert ample.audit is not None
+    # Squeeze the VPU path: any site whose choice moved must carry a
+    # concrete rejection for the member it abandoned.
+    tight = plan_network(specs,
+                         ResourceBudget(vpu_ops_budget=100_000))
+    moved = [s for s, a in zip(tight.sites, ample.sites)
+             if s.ip.name != a.ip.name
+             or s.precision_bits != a.precision_bits]
+    assert moved, "budget squeeze did not move any site"
+    for site in moved:
+        audit = tight.audit.site(site.spec.name)
+        reasons = audit.rejection_reasons()
+        assert reasons, f"no rejection recorded for {site.spec.name}"
+        assert any(ch.isdigit() for r in reasons for ch in r), \
+            "rejection reasons must carry concrete numbers"
+    assert tight.explain()
+
+
+def test_plan_audit_roundtrips_through_json():
+    clear_plan_cache()
+    specs = _block_specs()
+    plan = plan_network(specs, ResourceBudget(vpu_ops_budget=100_000))
+    back = NetworkPlan.from_json(plan.to_json())
+    assert back.audit is not None
+    assert back.audit.to_dict() == plan.audit.to_dict()
+    assert back.explain() == plan.explain()
+
+
+def test_cached_plan_keeps_its_audit():
+    clear_plan_cache()
+    specs = _block_specs()
+    cold = plan_network(specs, ResourceBudget())
+    warm = plan_network(specs, ResourceBudget())
+    assert warm is cold and warm.audit is not None
+
+
+def test_replan_fast_path_records_audit_event():
+    clear_plan_cache()
+    specs = _block_specs()
+    plan_network(specs, ResourceBudget())        # warms the share cache
+    plan = replan(specs, ResourceBudget().scaled(0.7))
+    assert plan.audit is not None
+    assert any("replan fast path" in e for e in plan.audit.events)
+
+
+def test_explain_handles_missing_audit():
+    plan = NetworkPlan(budget=ResourceBudget(), sites=())
+    assert "no audit" in plan.explain()
+
+
+# --------------------------------------------------------------------------
+# Metrics registry
+# --------------------------------------------------------------------------
+def test_registry_counter_gauge_histogram_and_render():
+    reg = MetricsRegistry(namespace="t")
+    reg.counter("reqs", "served requests", tenant="a").inc(3)
+    reg.gauge("depth").set(2.5)
+    h = reg.histogram("lat", "latency")
+    h.observe_many([1.0, 2.0, 3.0, 4.0])
+    snap = reg.snapshot()
+    assert snap["reqs"][0]["value"] == 3
+    assert snap["lat"][0]["count"] == 4
+    text = reg.render()
+    assert "# TYPE t_reqs counter" in text
+    assert 't_reqs{tenant="a"} 3' in text
+    assert "# TYPE t_lat summary" in text
+    assert "t_lat_count 4" in text
+    assert 't_lat{quantile="0.5"} 2.5' in text
+
+
+def test_registry_is_idempotent_but_kind_conflicts_raise():
+    reg = MetricsRegistry()
+    c = reg.counter("x")
+    assert reg.counter("x") is c
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+
+
+def test_registry_labels_may_shadow_registration_args():
+    # system_metrics renders event counts labelled kind=...; label names
+    # must never collide with _get's own parameters
+    reg = MetricsRegistry(namespace="t")
+    reg.counter("events", "event-log entries",
+                kind="watchdog.timeout", name="n", help_="h").inc(2)
+    text = reg.render()
+    assert 'kind="watchdog.timeout"' in text and 'name="n"' in text
+
+
+def test_system_metrics_counts_logged_events_by_kind():
+    log_event("watchdog.timeout", timeout_s=0.1)
+    log_event("watchdog.timeout", timeout_s=0.2)
+    text = system_metrics().render()
+    assert 'repro_events_total{kind="watchdog.timeout"} 2' in text
+
+
+def test_counter_rejects_negative_increment():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="only go up"):
+        reg.counter("c").inc(-1)
+
+
+def test_system_metrics_includes_tenant_shard_columns():
+    clear_plan_cache()
+    srv = AdaptiveServer(ResourceBudget(), max_batch=2)
+    srv.register("t", init_cnn_frontend(jax.random.PRNGKey(0),
+                                        channels=(6, 12), d_model=16),
+                 (12, 12, 6))
+    rng = np.random.default_rng(0)
+    srv.submit("t", rng.normal(size=(12, 12, 6)).astype(np.float32))
+    srv.drain()
+    text = srv.metrics().render()
+    assert 'repro_tenant_shard_degree{tenant="t"} 1' in text
+    assert 'repro_tenant_comm_cycles_share{tenant="t"} 0' in text
+    assert 'repro_tenant_requests_total{tenant="t"} 1' in text
+    assert srv.queue_stats()["popped_requests"] == 1
+
+
+# --------------------------------------------------------------------------
+# Telemetry shard columns + shared percentile
+# --------------------------------------------------------------------------
+def _planned_site_stub(deg, comm, est):
+    class _S:
+        precision_bits = 32
+        shard_degree = deg
+        footprint = Footprint(vmem_bytes=1, hbm_bytes=0, mxu_passes=0,
+                              vpu_ops=0, est_cycles=est, comm_cycles=comm)
+    return _S()
+
+
+def test_telemetry_snapshot_gains_shard_columns():
+    tel = TenantTelemetry(name="t", max_batch=4)
+
+    class _Plan:
+        sites = (_planned_site_stub(4, 250.0, 1000.0),
+                 _planned_site_stub(1, 0.0, 1000.0))
+
+    tel.record_batch(2, [10.0, 12.0], _Plan(), cache_hits=1,
+                     cache_misses=0)
+    snap = tel.snapshot()
+    assert snap["shard_degree"] == 4
+    assert snap["shard_degree_mix"] == {1: 1, 4: 1}
+    assert snap["comm_cycles_share"] == pytest.approx(250.0 / 2000.0)
+
+
+def test_latency_percentile_delegates_to_shared_estimator():
+    tel = TenantTelemetry(name="t", max_batch=4)
+    tel.latencies.extend([5.0, 1.0, 3.0, 2.0, 4.0])
+    for q in (0, 25, 50, 90, 100):
+        assert tel.latency_percentile(q) == percentile(
+            [1.0, 2.0, 3.0, 4.0, 5.0], q)
+
+
+# --------------------------------------------------------------------------
+# Calibration drift monitor
+# --------------------------------------------------------------------------
+def _fp(compute=1000.0, hbm=4096):
+    return Footprint(vmem_bytes=1024, hbm_bytes=hbm, mxu_passes=0,
+                     vpu_ops=100, est_cycles=compute + hbm_cycles(hbm))
+
+
+def _fitted_table(a=0.002, b=1e-6, c=5.0):
+    """A table fit on points lying exactly on us = a*compute + b*hbm + c."""
+    table = CalibrationTable()
+    for comp, hbm in ((1000.0, 4096), (2000.0, 8192), (4000.0, 2048),
+                      (8000.0, 16384)):
+        table.record("m", _fp(comp, int(hbm)), a * comp + b * hbm + c)
+    return table.fit(min_samples=3)
+
+
+def test_drift_monitor_quiet_on_honest_table():
+    table = _fitted_table()
+    mon = DriftMonitor(table, threshold=0.5, min_observations=3)
+    for comp in (1500.0, 2500.0, 3500.0, 4500.0):
+        fp = _fp(comp)
+        truth = 0.002 * comp + 1e-6 * fp.hbm_bytes + 5.0
+        assert mon.observe("m", fp, truth) is None
+    assert not mon.drifted
+    assert mon.mean_rel_error < 0.05
+
+
+def test_drift_monitor_flags_mis_scaled_table_once():
+    table = _fitted_table()
+    bad = mis_scaled_table(table, 8.0)
+    hits = []
+    mon = DriftMonitor(bad, threshold=0.5, min_observations=3,
+                       on_drift=hits.append)
+    report = None
+    for comp in (1500.0, 2500.0, 3500.0, 4500.0):
+        fp = _fp(comp)
+        truth = 0.002 * comp + 1e-6 * fp.hbm_bytes + 5.0
+        report = mon.observe("m", fp, truth) or report
+    assert mon.drifted and report is not None
+    assert report.mean_rel_error > 0.5
+    assert len(hits) == 1               # one flag per excursion
+    assert len(mon.reports) == 1
+    assert EVENTS.recent(kind="calibration.drift")
+
+
+def test_drift_monitor_recalibrate_rearms_and_quiets():
+    table = _fitted_table()
+    bad = mis_scaled_table(table, 8.0)
+    mon = DriftMonitor(bad, threshold=0.5, min_observations=3)
+    obs = []
+    for comp in (1500.0, 2500.0, 3500.0, 4500.0):
+        fp = _fp(comp)
+        truth = 0.002 * comp + 1e-6 * fp.hbm_bytes + 5.0
+        obs.append((fp, truth))
+        mon.observe("m", fp, truth)
+    assert mon.drifted
+    before = bad.fingerprint()
+    after = mon.recalibrate()
+    assert after != before              # refit moved the table identity
+    assert not mon.drifted
+    for fp, truth in obs:               # the refit table predicts truth
+        assert mon.observe("m", fp, truth) is None
+    assert not mon.drifted
+    assert EVENTS.recent(kind="calibration.refit")
+
+
+def test_drift_monitor_no_verdict_without_fit():
+    mon = DriftMonitor(CalibrationTable(), threshold=0.5,
+                       min_observations=1)
+    assert mon.observe("m", _fp(), 10.0) is None
+    assert mon.predictions == 0 and mon.observations == 1
