@@ -30,6 +30,11 @@ Paper tables (the reproduction targets):
       a bounded overhead of the untraced run, and the calibration drift
       monitor must trip on a mis-scaled table while staying quiet on
       the honest fit (recalibration re-arms it)
+  table_slo              — the SLO scheduler vs the synchronous round
+      loop on shared Poisson traces (async must strictly beat sync on
+      p95 wall latency AND deadline-miss rate on every mix), plus the
+      plan-preserving kill/recover scenario (snapshot -> simulated
+      death -> restore must re-plan ZERO cold graphs)
 
 System benches:
   bench_kernels     — us/call for every kernel family member
@@ -915,6 +920,340 @@ def bench_roofline():
         emit(f"roofline.{rec['cell']}", 0.0, derived)
 
 
+# ---------------------------------------------------------------------------
+# Table SLO — the SLO scheduler vs the synchronous loop, plus
+# plan-preserving recovery.
+#
+# Both arms replay the SAME Poisson trace (arrival times in est-cycles;
+# admission happens when each loop's model clock reaches the arrival,
+# so neither arm sleeps) and are judged on the dual-clock rule: the
+# modeled clock orders admissions, the monotonic wall clock judges
+# deadlines.  The sync arm is round-synchronous — admissions between
+# rounds, results stamped at round end (that IS the round-based serving
+# contract the scheduler replaces); the async arm stamps per launch.
+# Deadlines are calibrated from a measured warm batch wall time
+# (host-adaptive), so the assertions hold across machine speeds.
+#
+# Asserted per mix: async p95 wall latency < sync, async deadline-miss
+# rate < sync.  Asserted once: kill/recover replans ZERO cold graphs
+# (``STATS.plan_misses`` delta across restore + first post-crash wave).
+# ---------------------------------------------------------------------------
+# Tight enough that the sync loop's structural light latency (rest of
+# the in-flight round + one full heavy round ahead of it in FIFO bucket
+# order, ~2.5-3x) sits ABOVE it while the priority scheduler's
+# (~1-1.6x) sits well below — the miss-rate comparison then separates
+# the policies structurally, not by trace luck.
+SLO_LIGHT_DEADLINE_UNITS = 2.0  # x warm-batch wall time (tight)
+SLO_HEAVY_DEADLINE_UNITS = 30.0  # x warm-batch wall time (loose)
+# Heavy arrivals run slightly past service capacity (~4 per warm-batch
+# unit at max_batch=4), so a heavy backlog persists through the trace:
+# the sync loop drains the WHOLE heavy bucket before the light one each
+# round, making light wait behind the full backlog, while the
+# scheduler's per-launch priority pick serves light between heavy
+# batches.  Heavy's own deadline is loose enough (30x) that the backlog
+# never threatens it in either arm.
+SLO_HEAVY_MEAN_IAT_UNITS = 1 / 4.5   # heavy Poisson mean inter-arrival
+SLO_LIGHT_MEAN_IAT_UNITS = 1.0       # light Poisson mean inter-arrival
+
+
+def _slo_deployment(slo_pressure=0.0):
+    """The canonical two-tenant constrained device.  Does NOT clear the
+    plan cache: the mix comparison benches the steady-state (warm)
+    serving regime — the cold-restart cost is exactly what the recovery
+    scenario measures separately."""
+    from repro.core.resources import ResourceBudget
+    from repro.runtime import AdaptiveServer
+
+    device = ResourceBudget(vpu_ops_budget=SERVING_DEVICE_VPU_OPS,
+                            vmem_bytes=SERVING_DEVICE_VMEM)
+    heavy_p, light_p = _serving_tenants()
+    # grant_quantum bounds the budget-slice key space so the warmup
+    # replay's plan-cache entries cover the measured replay's grants:
+    # without it every EWMA fold mints a fresh fractional budget and the
+    # measured runs pay compile stalls that swamp the scheduling signal.
+    srv = AdaptiveServer(device, policy="demand", max_batch=4,
+                         slo_pressure=slo_pressure, grant_quantum=1 / 16)
+    return srv, heavy_p, light_p
+
+
+def _slo_trace(rng, n_heavy, n_light, unit_s):
+    """One Poisson trace in WALL seconds: per-tenant exponential
+    inter-arrivals scaled by the measured warm-batch wall time (heavy
+    load ~0.75x of its own lane alone — the light tenant and the
+    exponential bursts push rounds past one batch).  Both arms replay
+    the identical (at_s, tenant, sample) list."""
+    shapes = {"vision-heavy": (32, 32, 8), "edge-light": (24, 24, 6)}
+    arrivals = []
+    t = 0.0
+    for _ in range(n_heavy):
+        t += float(rng.exponential(SLO_HEAVY_MEAN_IAT_UNITS * unit_s))
+        arrivals.append((t, "vision-heavy"))
+    t = 0.0
+    for _ in range(n_light):
+        t += float(rng.exponential(SLO_LIGHT_MEAN_IAT_UNITS * unit_s))
+        arrivals.append((t, "edge-light"))
+    arrivals.sort(key=lambda pair: pair[0])
+    return [(at, name,
+             rng.normal(size=shapes[name]).astype(np.float32))
+            for at, name in arrivals]
+
+
+def _slo_unit_seconds():
+    """Warm-batch wall time (seconds) of one max-batch heavy round —
+    the host-adaptive unit every deadline and inter-arrival time is
+    expressed in.  Also warms the process-wide jax caches so neither
+    arm pays first-trace overhead."""
+    from repro.core.plan import clear_plan_cache
+    clear_plan_cache()
+    srv, heavy_p, light_p = _slo_deployment()
+    srv.register("vision-heavy", heavy_p, (32, 32, 8))
+    srv.register("edge-light", light_p, (24, 24, 6), activation="tanh",
+                 ladder=(16, 8))
+    rng = np.random.default_rng(7)
+    times = []
+    for _ in range(3):
+        for _ in range(4):
+            srv.submit("vision-heavy",
+                       rng.normal(size=(32, 32, 8)).astype(np.float32))
+        for _ in range(2):
+            srv.submit("edge-light",
+                       rng.normal(size=(24, 24, 6)).astype(np.float32))
+        t0 = time.perf_counter()
+        srv.step()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times[1:]))     # drop the cold round
+
+
+def _slo_register(sched_or_none, srv, heavy_p, light_p, unit_s):
+    """Register the two tenants — through the scheduler (with SLOs,
+    light = tight deadline + priority) when given one, else on the bare
+    server.  Returns the per-tenant wall deadline budget either way."""
+    deadlines = {"vision-heavy": SLO_HEAVY_DEADLINE_UNITS * unit_s,
+                 "edge-light": SLO_LIGHT_DEADLINE_UNITS * unit_s}
+    if sched_or_none is None:
+        srv.register("vision-heavy", heavy_p, (32, 32, 8))
+        srv.register("edge-light", light_p, (24, 24, 6),
+                     activation="tanh", ladder=(16, 8))
+        return deadlines
+    from repro.runtime import SLOSpec
+    sched_or_none.register(
+        "vision-heavy", heavy_p, (32, 32, 8),
+        slo=SLOSpec(deadline_s=deadlines["vision-heavy"], priority=0))
+    sched_or_none.register(
+        "edge-light", light_p, (24, 24, 6), activation="tanh",
+        ladder=(16, 8),
+        slo=SLOSpec(deadline_s=deadlines["edge-light"], priority=1))
+    return deadlines
+
+
+def _slo_replay(samples, deadlines, submit, pump, pending, outcomes=None):
+    """Wall-clock-driven replay shared by both arms: arrivals land on
+    the real clock (sleep only when idle), and every request is judged
+    from its SCHEDULED arrival instant — identical stamping for both
+    arms, so neither admission policy can hide queue wait.  Returns
+    per-tenant wall latencies and miss counts (a request that never
+    completes — shed/rejected — counts as a miss)."""
+    lat = {name: [] for name in deadlines}
+    missed = {name: 0 for name in deadlines}
+    arrival_s = {}
+    tenant_of = {}
+    i = 0
+    t0 = time.monotonic()
+    while i < len(samples) or pending():
+        now = time.monotonic() - t0
+        while i < len(samples) and samples[i][0] <= now:
+            at_s, name, x = samples[i]
+            rid = submit(name, x)
+            arrival_s[rid] = at_s
+            tenant_of[rid] = name
+            i += 1
+        if pending():
+            comps = pump()
+            done = time.monotonic() - t0
+            for c in comps:
+                wall = done - arrival_s[c.rid]
+                lat[c.tenant].append(wall)
+                if wall > deadlines[c.tenant]:
+                    missed[c.tenant] += 1
+        elif i < len(samples):
+            time.sleep(max(0.0, min(samples[i][0] - now, 0.01)))
+    if outcomes is not None:
+        for rid, verdict in outcomes().items():
+            if verdict in ("shed", "rejected"):
+                missed[tenant_of[rid]] += 1
+    total = sum(len(v) for v in lat.values())
+    dropped = len(arrival_s) - total
+    return lat, missed, total, dropped
+
+
+def _slo_sync_arm(samples, unit_s):
+    """Round-synchronous baseline: ``AdaptiveServer.step`` rounds, each
+    draining every queued bucket in FIFO bucket order — arrivals during
+    a round wait for the next one, and the light tenant drains behind
+    the heavy backlog."""
+    srv, heavy_p, light_p = _slo_deployment()
+    deadlines = _slo_register(None, srv, heavy_p, light_p, unit_s)
+    return _slo_replay(samples, deadlines,
+                       submit=lambda name, x: srv.submit(name, x),
+                       pump=srv.step, pending=srv.pending) + (None,)
+
+
+def _slo_async_arm(samples, unit_s):
+    """The SLO scheduler on the same trace: one launch per pump
+    (continuous batching between launches, EDF + priority dispatch,
+    shedding, miss-rate-weighted arbitration)."""
+    from repro.runtime import SLOScheduler
+    srv, heavy_p, light_p = _slo_deployment(slo_pressure=2.0)
+    sched = SLOScheduler(srv)
+    deadlines = _slo_register(sched, srv, heavy_p, light_p, unit_s)
+
+    def pump():
+        return sched.run(max_launches=sched.launches + 1)
+
+    out = _slo_replay(samples, deadlines,
+                      submit=lambda name, x: sched.submit(name, x),
+                      pump=pump, pending=sched.pending,
+                      outcomes=lambda: sched.outcomes)
+    return out + (sched,)
+
+
+def _slo_recovery_scenario():
+    """Serve, snapshot, kill, recover, serve again — and count the cold
+    plans the restart paid (the gate: ZERO)."""
+    import tempfile
+    from repro.core.plan import STATS, clear_plan_cache, plan_cache_stats
+    from repro.runtime import (SLOScheduler, recover_server,
+                               simulate_worker_death, snapshot_server)
+    clear_plan_cache()
+    srv, heavy_p, light_p = _slo_deployment(slo_pressure=2.0)
+    sched = SLOScheduler(srv)
+    _slo_register(sched, srv, heavy_p, light_p, unit_s=1.0)
+    rng = np.random.default_rng(3)
+
+    def wave(s):
+        for _ in range(8):
+            s.submit("vision-heavy",
+                     rng.normal(size=(32, 32, 8)).astype(np.float32))
+        for _ in range(4):
+            s.submit("edge-light",
+                     rng.normal(size=(24, 24, 6)).astype(np.float32))
+        return s.run()
+
+    # two identical waves settle the demand EWMA at the mix's
+    # fixed-point ratio, so the post-crash wave re-arbitrates to the
+    # SAME grants (ratio-identical targets, zero drift)
+    wave(sched)
+    wave(sched)
+    ckpt = tempfile.mkdtemp(prefix="slo_recovery_")
+    snapshot_server(srv, ckpt, 1, scheduler=sched)
+    simulate_worker_death()
+    misses0, hits0 = STATS.plan_misses, STATS.plan_hits
+    srv2, sched2 = recover_server(ckpt)
+    comps = wave(sched2)
+    cold = STATS.plan_misses - misses0
+    hits = STATS.plan_hits - hits0
+    assert comps, "recovered scheduler served nothing"
+    assert cold == 0, (
+        f"plan-preserving restart paid {cold} cold re-plans "
+        f"(stats: {plan_cache_stats()})")
+    assert hits > 0, "recovered server never hit the imported plan cache"
+    return len(comps), cold, hits, len(srv2.tenants)
+
+
+def table_slo(smoke: bool = False):
+    print("# Table SLO — continuous-batching SLO scheduler vs the "
+          "synchronous round loop on shared wall-clock Poisson traces "
+          f"(light deadline {SLO_LIGHT_DEADLINE_UNITS}x / heavy "
+          f"{SLO_HEAVY_DEADLINE_UNITS}x the warm-batch wall time; "
+          "p95 = worst tenant's p95 latency / its deadline), plus the "
+          "plan-preserving kill/recover scenario (derived=normalized "
+          "p95 + miss rate per arm + recovery_cold_plans)")
+    unit_s = _slo_unit_seconds()
+    # smoke replays the first full mix rather than a shortened one: the
+    # strict miss-rate comparison needs the heavy backlog to persist
+    # long enough that the sync loop structurally delays the light
+    # tenant — a 12x4 trace is short enough for sync to get lucky
+    mixes = [(16, 6)] if smoke else [(16, 6), (24, 4), (12, 12)]
+    for n_heavy, n_light in mixes:
+        rng = np.random.default_rng(1000 + n_heavy * 31 + n_light)
+        samples = _slo_trace(rng, n_heavy, n_light, unit_s)
+        n = len(samples)
+        # discarded warmup replays fill the plan cache with each arm's
+        # (batch-shape x slice-budget) keys — repeated until a replay
+        # plans entirely from cache (wall jitter shifts batch shapes
+        # between replays, so one pass can leave keys unseen).  The
+        # measured replays then compare scheduling policy, not
+        # cold-planning luck.
+        from repro.core.plan import STATS as _PSTATS
+        for arm in (_slo_sync_arm, _slo_async_arm):
+            for _ in range(6):
+                before = _PSTATS.plan_misses
+                arm(samples, unit_s)
+                if _PSTATS.plan_misses == before:
+                    break
+        # The SLO-centric percentile: latency only means anything
+        # relative to the tenant's own deadline, so each tenant's p95
+        # is normalized by its deadline budget and the system scores
+        # its WORST tenant.  (Raw worst-tenant p95 would reward
+        # ignoring the tight-deadline tenant — the priority scheduler
+        # deliberately spends loose heavy headroom on light latency.)
+        deadlines = {"vision-heavy": SLO_HEAVY_DEADLINE_UNITS * unit_s,
+                     "edge-light": SLO_LIGHT_DEADLINE_UNITS * unit_s}
+
+        def worst_norm_p95(lat):
+            return max(float(np.percentile(v, 95)) / deadlines[tn]
+                       for tn, v in lat.items() if v)
+
+        # median-of-replays: one replay is a single draw of wall jitter
+        # — a lucky trace can hand either arm a zero-miss run, and a
+        # one-off host stall (GC, a late compile) can hand either arm a
+        # catastrophic p95.  Scoring each replay separately and taking
+        # the median across five draws tolerates up to two bad draws
+        # per arm, so the strict comparisons measure the policy, not
+        # one replay's timing.
+        reps = 5
+
+        def measure(arm):
+            per_p95, per_miss, dropped, sched = [], [], 0, None
+            for _ in range(reps):
+                l, m, served, drop, sched = arm(samples, unit_s)
+                assert served + drop == n, (served, drop, n)
+                per_p95.append(worst_norm_p95(l))
+                per_miss.append(sum(m.values()) / n)
+                dropped += drop
+            return (float(np.median(per_p95)), float(np.median(per_miss)),
+                    dropped, sched)
+
+        p95_sync, miss_sync, s_drop, _ = measure(_slo_sync_arm)
+        p95_async, miss_async, a_drop, sched = measure(_slo_async_arm)
+        assert s_drop == 0, s_drop
+        p95_ok = p95_async < p95_sync
+        miss_ok = miss_async < miss_sync
+        assert p95_ok, (
+            f"mix {n_heavy}x{n_light}: async worst-tenant "
+            f"deadline-normalized p95 {p95_async:.3f} did not beat "
+            f"sync {p95_sync:.3f}")
+        assert miss_ok, (
+            f"mix {n_heavy}x{n_light}: async miss rate {miss_async:.3f} "
+            f"did not beat sync {miss_sync:.3f}")
+        st = sched.stats()
+        # the headline value is the async arm's worst-tenant p95 as a
+        # FRACTION of that tenant's deadline (< 1.0 = inside SLO)
+        emit(f"table_slo.mix_{n_heavy}x{n_light}", p95_async,
+             f"p95_norm_sync={p95_sync:.3f}"
+             f";p95_norm_async={p95_async:.3f}"
+             f";miss_sync={miss_sync:.3f};miss_async={miss_async:.3f}"
+             f";async_beats_sync_p95={int(p95_ok)}"
+             f";async_beats_sync_miss={int(miss_ok)}"
+             f";sheds={st['sheds']};preemptions={st['preemptions']}"
+             f";launches={st['launches']}")
+    served, cold, hits, tenants = _slo_recovery_scenario()
+    emit("table_slo.recovery", 0.0,
+         f"recovery_cold_plans={cold};post_restore_hits={hits}"
+         f";served_after_recover={served};tenants={tenants}"
+         f";recovered_ok=1")
+
+
 BENCHES = {
     "table1": table1_ip_characteristics,
     "table2": table2_resource_utilization,
@@ -925,6 +1264,7 @@ BENCHES = {
     "table_serving": table_serving,
     "table_mesh": table_mesh,
     "table_obs": table_obs,
+    "table_slo": table_slo,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
     "train_step": bench_train_step,

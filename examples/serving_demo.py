@@ -13,6 +13,13 @@ The trace replayed here is the canonical one CI's ``table_serving``
 bench gates on (``benchmarks/run.py::_run_serving``) — the demo is a
 narrated view of the same experiment, so the two can never diverge.
 
+Part 2 walks the **SLO scheduler** (``runtime/scheduler.py``): the
+round loop is replaced by event-driven continuous batching where the
+light tenant holds a tight wall deadline and a higher priority — watch
+it jump the heavy backlog (a preemption, with an immediate arbiter
+grant transfer) and report both clocks: modeled est-cycles percentiles
+next to measured wall-seconds and the deadline-miss rate.
+
     PYTHONPATH=src python examples/serving_demo.py
 """
 import importlib.util
@@ -55,6 +62,45 @@ def main():
           "member (the static half-slice forces the slower MXU one) and "
           "squeezes the light tenant below its f32 footprint — which "
           "serves on at the 8-bit LUT rung instead of failing.")
+    scheduler_walkthrough(bench)
+
+
+def scheduler_walkthrough(bench):
+    import numpy as np
+    from repro.runtime import SLOScheduler, SLOSpec
+
+    print("\n== part 2: the SLO scheduler on the same deployment ==")
+    srv, heavy_p, light_p = bench._slo_deployment(slo_pressure=2.0)
+    sched = SLOScheduler(srv)
+    sched.register("vision-heavy", heavy_p, (32, 32, 8),
+                   slo=SLOSpec(deadline_s=5.0, priority=0))
+    sched.register("edge-light", light_p, (24, 24, 6),
+                   activation="tanh", ladder=(16, 8),
+                   slo=SLOSpec(deadline_s=1.0, priority=1))
+    rng = np.random.default_rng(0)
+    # a heavy burst queues FIRST, then the priority tenant walks in:
+    # FIFO would drain the whole burst before the light request
+    for _ in range(8):
+        sched.submit("vision-heavy",
+                     rng.normal(size=(32, 32, 8)).astype(np.float32))
+    for _ in range(2):
+        sched.submit("edge-light",
+                     rng.normal(size=(24, 24, 6)).astype(np.float32))
+    comps = sched.run()
+    order = [c.tenant for c in comps[:4]]
+    st = sched.stats()
+    print(f"first launch served: {order[0]} (queued last, dispatched "
+          f"first — {st['preemptions']} preemption(s) moved the grant)")
+    print(f"launches={st['launches']} sheds={st['sheds']} "
+          f"rejections={st['rejections']}")
+    for name, t in srv.tenants.items():
+        snap = t.telemetry.snapshot()
+        print(f"   {name:<14s} p95={snap['p95_cycles']:.3e} cycles "
+              f"(modeled) | wall p95={snap['wall_p95_s'] * 1e3:.2f} ms "
+              f"(measured) | miss rate={snap['deadline_miss_rate']:.2f} "
+              f"| preempted-for={snap['preemptions']}")
+    print("Both clocks on one row is the dual-clock rule: est-cycles "
+          "lanes stay policy-comparable, wall seconds judge the SLO.")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,50 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
+class _LeafRef:
+    """Placeholder marking leaf ``i`` inside the structure spec."""
+
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+
+def _encode_structure(node):
+    """JSON-able spec of a dict/list/tuple pytree with ``_LeafRef``
+    placeholders at leaf positions; raises TypeError on any node the
+    spec cannot represent (custom pytree nodes, non-str dict keys)."""
+    if isinstance(node, _LeafRef):
+        return {"t": "leaf", "i": node.i}
+    if isinstance(node, dict):
+        if any(not isinstance(k, str) for k in node):
+            raise TypeError("structure spec needs str dict keys")
+        return {"t": "dict",
+                "items": {k: _encode_structure(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"t": "tuple" if isinstance(node, tuple) else "list",
+                "items": [_encode_structure(v) for v in node]}
+    if node is None:
+        return {"t": "none"}
+    raise TypeError(f"cannot encode pytree node of type {type(node)!r}")
+
+
+def _decode_structure(spec, load: Callable[[int], Any]):
+    t = spec["t"]
+    if t == "leaf":
+        return load(spec["i"])
+    if t == "dict":
+        return {k: _decode_structure(v, load)
+                for k, v in spec["items"].items()}
+    if t == "list":
+        return [_decode_structure(v, load) for v in spec["items"]]
+    if t == "tuple":
+        return tuple(_decode_structure(v, load) for v in spec["items"])
+    if t == "none":
+        return None
+    raise ValueError(f"unknown structure node {t!r}")
+
+
 def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
          keep: int = 3) -> str:
     """Synchronous sharded save with atomic commit."""
@@ -41,11 +85,21 @@ def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None,
     tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=f".{step_name}."))
     try:
         leaves, treedef = _flatten(tree)
+        # Self-describing structure spec (dict/list/tuple trees only):
+        # lets ``restore_blind`` rebuild the tree with NO target skeleton
+        # — the recovery path, where the restarted process knows nothing
+        # about the params structure it is about to inherit.
+        try:
+            structure = _encode_structure(jax.tree_util.tree_unflatten(
+                treedef, [_LeafRef(i) for i in range(len(leaves))]))
+        except TypeError:
+            structure = None
         manifest = {
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(leaves),
             "leaves": [],
+            "structure": structure,
             "extra": extra or {},
         }
         for i, leaf in enumerate(leaves):
@@ -118,6 +172,32 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     if not latest.exists():
         return None
     return int(latest.read_text().strip().split("_")[-1])
+
+
+def restore_blind(ckpt_dir: str, *, step: Optional[int] = None
+                  ) -> Tuple[Any, Dict]:
+    """Rebuild the saved tree with no target skeleton, from the
+    manifest's structure spec — the crash-recovery entry point
+    (``runtime/recovery.py``): a restarted process inherits params whose
+    structure only the checkpoint knows.  Raises ValueError for
+    checkpoints of non-dict/list/tuple pytrees (use ``restore`` with an
+    explicit target there)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    structure = manifest.get("structure")
+    if structure is None:
+        raise ValueError(
+            "checkpoint carries no structure spec (custom pytree nodes); "
+            "restore() with a target tree is required")
+
+    def _load(i: int):
+        return jax.numpy.asarray(np.load(d / f"arr_{i:05d}.npy"))
+
+    return _decode_structure(structure, _load), manifest["extra"]
 
 
 def restore(ckpt_dir: str, target_tree, *, step: Optional[int] = None,

@@ -8,8 +8,9 @@ deterministic resumable data pipeline, async checkpointing with atomic
 commit, watchdog + straggler monitoring, restore-on-start (elastic:
 restores onto whatever mesh the surviving devices support), and
 optional cross-pod gradient compression.  ``--simulate-failure N``
-raises at step N to exercise the restart path end-to-end (used by
-examples/elastic_restart.py and tests).
+raises at step N to exercise the restart path end-to-end (used by the
+tests; the *serving* restart path is demoed by
+examples/elastic_restart.py).
 """
 from __future__ import annotations
 

@@ -210,13 +210,18 @@ class MetricsRegistry:
 
 
 def system_metrics(server=None,
-                   registry: Optional[MetricsRegistry] = None
-                   ) -> MetricsRegistry:
+                   registry: Optional[MetricsRegistry] = None,
+                   scheduler=None) -> MetricsRegistry:
     """Collect the system's scattered stats into one registry: planner
     counters + plan cache, event log, tracer buffer — and, when given
     an ``AdaptiveServer``, its arbiter, queue, and per-tenant telemetry
-    (shard degree and comm share columns included)."""
+    (shard degree, comm share, and SLO outcome columns included).
+    ``scheduler=`` (an ``SLOScheduler``) adds per-tenant queue-depth
+    gauges and the scheduler-level shed/preemption counters; its server
+    is collected automatically when ``server`` is omitted."""
     reg = registry if registry is not None else MetricsRegistry()
+    if server is None and scheduler is not None:
+        server = scheduler.server
 
     from repro.core.plan import STATS, plan_cache_stats
     cache = plan_cache_stats()
@@ -267,9 +272,42 @@ def system_metrics(server=None,
             reg.gauge("tenant_comm_cycles_share",
                       "collective cycles / total est cycles",
                       tenant=name).set(snap["comm_cycles_share"])
+            # SLO outcome columns (dual clock: the latency summary
+            # below stays est-cycles; wall seconds get their own one)
+            reg.gauge("tenant_deadline_miss_rate",
+                      "(late completions + shed) / SLO-tracked",
+                      tenant=name).set(snap["deadline_miss_rate"])
+            reg.counter("tenant_deadline_misses_total",
+                        "late completions + shed", tenant=name).inc(
+                snap["deadline_misses"])
+            reg.counter("tenant_shed_total",
+                        "requests dropped as already-hopeless",
+                        tenant=name).inc(snap["shed"])
+            reg.counter("tenant_preemptions_total",
+                        "priority dispatches past a queued bucket",
+                        tenant=name).inc(snap["preemptions"])
             hist = reg.histogram("tenant_latency_cycles",
                                  "request latency in est-cycles",
                                  tenant=name)
             tenant = server.tenants[name]
             hist.observe_many(tenant.telemetry.latencies)
+            whist = reg.histogram("tenant_wall_latency_seconds",
+                                  "measured wall latency of SLO-tracked "
+                                  "requests", tenant=name)
+            whist.observe_many(tenant.telemetry.wall_latencies)
+    if scheduler is not None:
+        for name, depth in scheduler.stats()["queue_depths"].items():
+            reg.gauge("scheduler_queue_depth",
+                      "admitted-but-unlaunched requests",
+                      tenant=name).set(depth)
+        reg.gauge("scheduler_pending_requests",
+                  "queued + deferred requests awaiting a verdict").set(
+            scheduler.pending())
+        reg.counter("scheduler_launches_total").inc(scheduler.launches)
+        reg.counter("scheduler_sheds_total").inc(scheduler.sheds)
+        reg.counter("scheduler_rejections_total",
+                    "admissions past max_queue_depth").inc(
+            scheduler.rejections)
+        reg.counter("scheduler_preemptions_total").inc(
+            scheduler.preemptions)
     return reg

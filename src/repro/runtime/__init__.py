@@ -3,15 +3,23 @@
 ``server.py``/``arbiter.py``/``batching.py``/``telemetry.py`` form the
 adaptive-IP serving subsystem — multi-tenant budget arbitration,
 shape-bucketed batching, live re-planning (docs/adaptive_ips.md,
-"Serving runtime contract").  ``fault_tolerance.py`` holds the
-watchdog / straggler / elastic-remesh hooks.
+"Serving runtime contract").  ``scheduler.py`` adds the SLO-aware
+continuous-batching dispatch loop and ``recovery.py`` the
+plan-preserving restart path on top of ``fault_tolerance.py``'s
+watchdog / straggler / elastic-remesh hooks (docs/adaptive_ips.md,
+"Scheduling & recovery contract").
 """
 from repro.runtime.arbiter import BudgetArbiter, TenantShare
 from repro.runtime.batching import Request, ShapeBucketQueue
+from repro.runtime.recovery import (RecoveryManager, recover_server,
+                                    simulate_worker_death, snapshot_server)
+from repro.runtime.scheduler import SLOScheduler, SLOSpec
 from repro.runtime.server import AdaptiveServer, Completion, Tenant
 from repro.runtime.telemetry import TenantTelemetry
 
 __all__ = [
-    "AdaptiveServer", "BudgetArbiter", "Completion", "Request",
-    "ShapeBucketQueue", "Tenant", "TenantShare", "TenantTelemetry",
+    "AdaptiveServer", "BudgetArbiter", "Completion", "RecoveryManager",
+    "Request", "SLOScheduler", "SLOSpec", "ShapeBucketQueue", "Tenant",
+    "TenantShare", "TenantTelemetry", "recover_server",
+    "simulate_worker_death", "snapshot_server",
 ]

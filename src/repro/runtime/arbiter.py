@@ -31,6 +31,7 @@ than devices — a tenant cannot hold less than one chip.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Tuple
 
 from repro.core.resources import MeshSpec, ResourceBudget
@@ -61,11 +62,19 @@ class BudgetArbiter:
     def __init__(self, budget: Optional[ResourceBudget] = None, *,
                  policy: str = "demand", rebalance_threshold: float = 0.05,
                  demand_alpha: float = 0.5, calibration=None,
-                 mesh: Optional[MeshSpec] = None):
+                 mesh: Optional[MeshSpec] = None,
+                 slo_pressure: float = 0.0, miss_alpha: float = 0.5,
+                 grant_quantum: float = 0.0):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
         if not 0.0 < demand_alpha <= 1.0:
             raise ValueError("demand_alpha must be in (0, 1]")
+        if slo_pressure < 0.0:
+            raise ValueError("slo_pressure must be >= 0")
+        if not 0.0 < miss_alpha <= 1.0:
+            raise ValueError("miss_alpha must be in (0, 1]")
+        if not 0.0 <= grant_quantum < 1.0:
+            raise ValueError("grant_quantum must be in [0, 1)")
         self.budget = budget or ResourceBudget()
         self.policy = policy
         # Mesh mode: grants are whole-device slices of this mesh; None
@@ -80,11 +89,28 @@ class BudgetArbiter:
         self.calibration = calibration
         self.rebalance_threshold = rebalance_threshold
         self.demand_alpha = demand_alpha
+        # SLO pressure: a tenant's demand weight is multiplied by
+        # (1 + slo_pressure * deadline-miss-rate EWMA), so grants chase
+        # *deadlines missed*, not just work submitted (0.0 = off — the
+        # pre-SLO demand arbiter, and what plain AdaptiveServer uses).
+        self.slo_pressure = slo_pressure
+        self.miss_alpha = miss_alpha
+        # Grant quantization: targets snap DOWN to multiples of
+        # ``grant_quantum`` (never below a tenant's floor), so grants —
+        # and therefore the ``ResourceBudget`` slices the server plans
+        # under — take at most 1/quantum distinct values per tenant
+        # instead of a fresh float per EWMA fold.  That bounds the plan
+        # cache's key cardinality: steady-state traffic re-plans into
+        # cache hits rather than minting a new budget key (and a new
+        # compile) every rebalance.  0.0 = off (exact targets).
+        self.grant_quantum = grant_quantum
         self._floors: Dict[str, float] = {}
         self._demand: Dict[str, float] = {}
         self._pending: Dict[str, float] = {}
         self._granted: Dict[str, float] = {}
+        self._miss_rate: Dict[str, float] = {}
         self.rebalances = 0
+        self.preemptions = 0
 
     def register(self, name: str, floor: float = 0.0) -> None:
         """Admit one tenant.  Validates the whole tenant set *before*
@@ -119,11 +145,29 @@ class BudgetArbiter:
         self._floors[name] = floor
         self._demand[name] = 0.0
         self._pending[name] = 0.0
+        self._miss_rate[name] = 0.0
 
     def observe(self, name: str, cost: float) -> None:
         """Record submitted work (est-cycles) for one tenant; folded
         into the demand EWMA at the next ``split()``."""
         self._pending[name] += float(cost)
+
+    def record_outcome(self, name: str, *, served: int, missed: int) -> None:
+        """Fold one dispatch round's deadline outcomes into the
+        tenant's miss-rate EWMA (``missed`` counts late completions AND
+        shed requests; ``served`` counts everything that left the queue
+        this round).  With ``slo_pressure > 0`` the EWMA multiplies the
+        tenant's demand weight at the next ``split()`` — deadline
+        misses, not just submitted work, set the grants."""
+        if name not in self._floors:
+            raise KeyError(f"tenant {name!r} is not registered")
+        rate = min(max(float(missed) / max(served, 1), 0.0), 1.0)
+        a = self.miss_alpha
+        self._miss_rate[name] = (1 - a) * self._miss_rate[name] + a * rate
+
+    def miss_rate(self, name: str) -> float:
+        """The tenant's current deadline-miss-rate EWMA."""
+        return self._miss_rate.get(name, 0.0)
 
     def _targets(self) -> Dict[str, float]:
         names = list(self._floors)
@@ -131,13 +175,29 @@ class BudgetArbiter:
         if self.policy == "static":
             return {m: 1.0 / n for m in names}
         total_floor = sum(self._floors.values())
-        total_demand = sum(self._demand.values())
-        if total_demand <= 0.0:
+        weight = {m: self._demand[m]
+                  * (1.0 + self.slo_pressure * self._miss_rate[m])
+                  for m in names}
+        total_weight = sum(weight.values())
+        if total_weight <= 0.0:
             raw = {m: 1.0 / n for m in names}
         else:
-            raw = {m: self._demand[m] / total_demand for m in names}
+            raw = {m: weight[m] / total_weight for m in names}
         surplus = max(0.0, 1.0 - total_floor)
-        return {m: self._floors[m] + surplus * raw[m] for m in names}
+        targets = {m: self._floors[m] + surplus * raw[m] for m in names}
+        return self._quantize(targets)
+
+    def _quantize(self, targets: Dict[str, float]) -> Dict[str, float]:
+        """Snap each target down to the ``grant_quantum`` grid, floored
+        at the tenant's minimal feasible fraction.  Rounding down keeps
+        the sum feasible (never exceeds the un-quantized total); a
+        target that rounds below its floor lands ON the floor — itself
+        a recurring, cache-friendly value."""
+        q = self.grant_quantum
+        if q <= 0.0:
+            return targets
+        return {m: max(self._floors[m], q * math.floor(t / q + 1e-9))
+                for m, t in targets.items()}
 
     def split(self) -> Dict[str, TenantShare]:
         """Fold pending observations into the EWMA and (re)grant.
@@ -206,6 +266,84 @@ class BudgetArbiter:
         for m in order[:left]:
             grant[m] += 1
         return grant
+
+    def preempt(self, winner: str, victim: str) -> float:
+        """Immediate grant transfer: squeeze ``victim`` to its floor
+        and hand the freed fraction to ``winner`` — what a priority
+        tenant does to a queued lower-priority bucket *instead of*
+        out-bidding it through the demand EWMA (which takes rounds of
+        hysteresis to move).  Bypasses the rebalance threshold, counts
+        as a rebalance, and logs an ``arbiter.preempt`` event.  Returns
+        the fraction that moved (0.0 when the victim already sat at its
+        floor).  Fractional mode only — mesh grants are whole devices
+        and re-slice through ``split()``."""
+        if self.mesh is not None:
+            raise ValueError("preempt() is fractional-mode only; mesh "
+                             "grants move through split()")
+        for m in (winner, victim):
+            if m not in self._granted:
+                raise KeyError(f"tenant {m!r} has no grant yet "
+                               f"(call split() first)")
+        freed = max(0.0, self._granted[victim] - self._floors[victim])
+        if freed <= 0.0:
+            return 0.0
+        self._granted[victim] = self._floors[victim]
+        self._granted[winner] += freed
+        self.rebalances += 1
+        self.preemptions += 1
+        log_event("arbiter.preempt", winner=winner, victim=victim,
+                  moved=freed, total=self.preemptions)
+        return freed
+
+    def shares(self) -> Dict[str, TenantShare]:
+        """The current grants as ``TenantShare`` rows without folding
+        pending observations (what ``split()`` already decided, plus
+        any ``preempt()`` moves since)."""
+        return {m: TenantShare(name=m, demand=self._demand[m],
+                               floor=self._floors[m],
+                               fraction=self._granted.get(m, 0.0),
+                               devices=self._devices.get(m, 0))
+                for m in self._floors}
+
+    # -- persistence (plan-preserving restart) ------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the arbitration state a restart must
+        preserve: floors, demand/miss EWMAs, un-folded observations,
+        and the current grants.  Restoring this (``load_state``) keeps
+        post-restart budget slices bit-identical to pre-crash, so every
+        tenant's first batch re-plans under the *same* slice and hits
+        the imported plan cache."""
+        return {
+            "floors": dict(self._floors),
+            "demand": dict(self._demand),
+            "pending": dict(self._pending),
+            "granted": dict(self._granted),
+            "miss_rate": dict(self._miss_rate),
+            "rebalances": self.rebalances,
+            "preemptions": self.preemptions,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict`` snapshot.  Every snapshotted tenant
+        must already be registered (registration re-derives the floor
+        from the plan, which must match the snapshot — a drifted floor
+        means the checkpoint belongs to a different deployment)."""
+        missing = set(state["floors"]) - set(self._floors)
+        if missing:
+            raise ValueError(f"snapshot covers unregistered tenants: "
+                             f"{sorted(missing)}")
+        for name, floor in state["floors"].items():
+            if abs(self._floors[name] - floor) > 1e-9:
+                raise ValueError(
+                    f"tenant {name!r} floor drifted: snapshot "
+                    f"{floor:.6f} vs registered {self._floors[name]:.6f}")
+        self._demand.update(state["demand"])
+        self._pending.update(state["pending"])
+        self._granted.update(state["granted"])
+        self._devices = self._device_grants(self._granted)
+        self._miss_rate.update(state.get("miss_rate", {}))
+        self.rebalances = int(state.get("rebalances", self.rebalances))
+        self.preemptions = int(state.get("preemptions", self.preemptions))
 
     def budget_for(self, name: str) -> ResourceBudget:
         """The budget slice currently granted to ``name``.  Mesh mode

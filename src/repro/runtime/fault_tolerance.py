@@ -83,18 +83,30 @@ class StragglerEvent:
 class StragglerMonitor:
     """Flags steps slower than ``threshold`` x the EWMA.  The mitigation
     hook is where a production deployment rebalances grad-accumulation
-    microbatches away from the slow host or swaps in a hot spare."""
+    microbatches away from the slow host or swaps in a hot spare.
+
+    Every flagged step is recorded in ``events`` and logged through
+    ``obs.EVENTS`` (``straggler.flagged``), but the mitigation hook is
+    *rearm-gated*: after it fires, ``rearm`` consecutive normal steps
+    must pass before it can fire again (``rearm=0`` fires on every
+    flag) — a sustained slowdown triggers one mitigation, not one per
+    step."""
 
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
-                 warmup: int = 3,
+                 warmup: int = 3, rearm: int = 0,
                  on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        if rearm < 0:
+            raise ValueError("rearm must be >= 0")
         self.threshold = threshold
         self.alpha = alpha
         self.warmup = warmup
+        self.rearm = rearm
         self.on_straggler = on_straggler
         self.ewma: Optional[float] = None
         self.events: List[StragglerEvent] = []
+        self.hook_fires = 0
         self._n = 0
+        self._suppress = 0   # normal steps still owed before re-firing
 
     def record(self, step: int, step_time: float) -> Optional[StragglerEvent]:
         self._n += 1
@@ -106,10 +118,17 @@ class StragglerMonitor:
             ev = StragglerEvent(step, step_time, self.ewma,
                                 step_time / self.ewma)
             self.events.append(ev)
-            if self.on_straggler:
-                self.on_straggler(ev)
+            log_event("straggler.flagged", step=step, ratio=ev.ratio,
+                      ewma=self.ewma, suppressed=self._suppress > 0)
+            if self._suppress == 0:
+                if self.on_straggler:
+                    self.on_straggler(ev)
+                self.hook_fires += 1
+                self._suppress = self.rearm
             # don't poison the EWMA with the outlier
             return ev
+        if self._suppress > 0:
+            self._suppress -= 1
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
         return ev
 

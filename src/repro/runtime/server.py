@@ -95,7 +95,9 @@ class AdaptiveServer:
                  max_batch: int = 4, autotune: bool = False,
                  interpret: bool = True, demand_alpha: float = 0.5,
                  fuse: bool = True, calibration=None,
-                 mesh: Optional[MeshSpec] = None):
+                 mesh: Optional[MeshSpec] = None,
+                 slo_pressure: float = 0.0, miss_alpha: float = 0.5,
+                 grant_quantum: float = 0.0):
         self.budget = budget or ResourceBudget()
         # fuse (default True): serve every tenant through fusion-aware
         # plans — a block the planner can fuse runs conv->pool->act as
@@ -113,10 +115,16 @@ class AdaptiveServer:
         # tenant holding several devices may serve *sharded* plans
         # (executed through shard_map when the layout is uniform; see
         # _execute).  None keeps the fractional single-chip server.
+        # slo_pressure > 0 makes the arbiter chase deadline-miss EWMAs
+        # on top of demand — only meaningful under the SLO scheduler
+        # (``runtime/scheduler.py``), which feeds ``record_outcome``.
         self.arbiter = BudgetArbiter(self.budget, policy=policy,
                                      rebalance_threshold=rebalance_threshold,
                                      demand_alpha=demand_alpha,
-                                     calibration=calibration, mesh=mesh)
+                                     calibration=calibration, mesh=mesh,
+                                     slo_pressure=slo_pressure,
+                                     miss_alpha=miss_alpha,
+                                     grant_quantum=grant_quantum)
         self.mesh = self.arbiter.mesh
         self.max_batch = max_batch
         self.autotune = autotune
@@ -211,12 +219,7 @@ class AdaptiveServer:
         """
         if not self._queue:
             return []
-        self._shares = self.arbiter.split()
-        for name, share in self._shares.items():
-            t = self.tenants[name]
-            if t.granted and abs(share.fraction - t.granted) > 1e-12:
-                t.telemetry.replans += 1
-            t.granted = share.fraction
+        self._apply_shares(self.arbiter.split())
         completions: List[Completion] = []
         for key in self._queue.keys():
             while True:
@@ -228,6 +231,20 @@ class AdaptiveServer:
             self.clock = max(self.clock,
                              max(c.finished for c in completions))
         return completions
+
+    def _apply_shares(self, shares: Dict[str, TenantShare]) -> None:
+        """Adopt one arbitration round's grants.  A moved grant changes
+        the tenant's slice budget, which re-plans its graphs on the next
+        batch — counted as a re-plan when the tenant had already been
+        granted before.  Shared by ``step`` and the SLO scheduler
+        (``runtime/scheduler.py``), so both loops account grant moves
+        identically."""
+        self._shares = shares
+        for name, share in shares.items():
+            t = self.tenants[name]
+            if t.granted and abs(share.fraction - t.granted) > 1e-12:
+                t.telemetry.replans += 1
+            t.granted = share.fraction
 
     def drain(self, max_steps: int = 1000) -> List[Completion]:
         out: List[Completion] = []

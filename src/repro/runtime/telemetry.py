@@ -12,6 +12,17 @@ per shard degree (degree 1 = replicated), ``shard_degree`` is the
 widest degree the tenant has served, and ``comm_cycles_share`` is the
 fraction of the tenant's total estimated cycles spent in collectives —
 how much of a mesh tenant's bill is traffic, not compute.
+
+SLO columns (populated by ``runtime/scheduler.py``; zero under the
+plain synchronous server) keep the **dual-clock rule**: latency
+percentiles stay in modeled est-cycles (``p50_cycles``/``p95_cycles``)
+while deadline outcomes are judged on the monotonic wall clock — so the
+snapshot carries BOTH clocks: ``wall_p50_s``/``wall_p95_s`` are
+measured wall-clock latencies of SLO-tracked requests, and
+``deadline_miss_rate`` = (late completions + shed) / SLO-tracked
+requests.  ``shed`` counts requests dropped as already-hopeless,
+``preemptions`` counts dispatches where this tenant's priority jumped a
+queued lower-priority bucket.
 """
 from __future__ import annotations
 
@@ -47,6 +58,14 @@ class TenantTelemetry:
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
     max_quant_rel_err: float = 0.0
+    # SLO accounting (dual clock: deadlines are wall-clock; the
+    # percentile columns above stay est-cycles)
+    slo_tracked: int = 0        # requests submitted under an SLOSpec
+    deadline_misses: int = 0    # late completions + shed
+    shed: int = 0               # dropped as already-hopeless
+    preemptions: int = 0        # priority dispatches past a queued bucket
+    wall_latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
     def record_batch(self, batch_size: int, latencies: List[float],
                      plan, *, cache_hits: int, cache_misses: int,
@@ -90,6 +109,34 @@ class TenantTelemetry:
         return (self.comm_cycles_sum / self.est_cycles_sum
                 if self.est_cycles_sum else 0.0)
 
+    def record_slo_batch(self, wall_latencies: List[float],
+                         missed: int) -> None:
+        """One SLO-tracked batch's wall-clock outcomes: per-request
+        measured wall latency (seconds) and how many of them finished
+        past their deadline."""
+        self.slo_tracked += len(wall_latencies)
+        self.wall_latencies.extend(wall_latencies)
+        self.deadline_misses += missed
+
+    def record_shed(self, n: int = 1) -> None:
+        """``n`` requests dropped as already-hopeless; every shed is a
+        deadline miss too."""
+        self.shed += n
+        self.slo_tracked += n
+        self.deadline_misses += n
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        """(late completions + shed) / SLO-tracked requests."""
+        return (self.deadline_misses / self.slo_tracked
+                if self.slo_tracked else 0.0)
+
+    def wall_percentile(self, q: float) -> float:
+        """q-th percentile of measured wall-clock latency (seconds) of
+        SLO-tracked requests — the second clock of the dual-clock rule
+        (``latency_percentile`` is the est-cycles one)."""
+        return percentile(self.wall_latencies, q)
+
     def latency_percentile(self, q: float) -> float:
         """q-th percentile (0..100) of request latency in est-cycles,
         over the most recent ``LATENCY_WINDOW`` requests.  Delegates to
@@ -112,6 +159,15 @@ class TenantTelemetry:
             "shard_degree_mix": dict(sorted(
                 self.shard_degree_mix.items())),
             "comm_cycles_share": self.comm_cycles_share,
+            # dual-clock SLO columns: *_cycles above are the modeled
+            # est-cycles clock; wall_* here are the monotonic wall clock
+            "slo_tracked": self.slo_tracked,
+            "deadline_misses": self.deadline_misses,
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "shed": self.shed,
+            "preemptions": self.preemptions,
+            "wall_p50_s": self.wall_percentile(50),
+            "wall_p95_s": self.wall_percentile(95),
             "replans": self.replans,
             "plan_cache_hits": self.plan_cache_hits,
             "plan_cache_misses": self.plan_cache_misses,

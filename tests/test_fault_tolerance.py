@@ -1,7 +1,11 @@
-"""Fault-tolerance runtime: watchdog lifecycle, straggler detection,
-elastic re-mesh shapes."""
+"""Fault-tolerance runtime: watchdog lifecycle, straggler detection
+(threshold/EWMA flagging, rearm gating, event emission), elastic
+re-mesh shapes."""
 import time
 
+import pytest
+
+from repro.obs import EVENTS
 from repro.runtime.fault_tolerance import (StragglerMonitor, Watchdog,
                                            choose_mesh_shape)
 
@@ -81,6 +85,67 @@ def test_straggler_monitor_flags_outliers():
     assert events == [ev]
     # the outlier must not poison the EWMA
     assert mon.ewma < 1.5
+
+
+def test_straggler_quiet_during_warmup_and_below_threshold():
+    mon = StragglerMonitor(threshold=2.0, warmup=3)
+    assert mon.record(0, 10.0) is None       # first sample seeds the EWMA
+    assert mon.record(1, 19.0) is None       # warmup: never flagged
+    for step in range(2, 8):
+        assert mon.record(step, 1.9) is None  # 1.9x < threshold 2.0x
+    assert mon.events == []
+    assert mon.hook_fires == 0
+
+
+def test_straggler_ewma_tracks_drift_not_spikes():
+    """A slow *trend* raises the EWMA baseline so later equal steps stop
+    flagging; a one-off spike is flagged but excluded from the fold."""
+    mon = StragglerMonitor(threshold=2.0, alpha=0.5, warmup=2)
+    for step in range(4):
+        mon.record(step, 1.0)
+    spike = mon.record(4, 3.0)
+    assert spike is not None and spike.ratio == pytest.approx(3.0)
+    assert mon.ewma == pytest.approx(1.0)    # spike did not poison it
+    for step in range(5, 10):
+        mon.record(step, 1.8)                # sustained drift folds in
+    assert mon.ewma > 1.6
+    assert mon.record(10, 1.8) is None       # new normal, not a straggler
+
+
+def test_straggler_rearm_gates_hook_but_records_every_flag():
+    hook = []
+    mon = StragglerMonitor(threshold=2.0, warmup=2, rearm=2,
+                           on_straggler=hook.append)
+    for step in range(4):
+        mon.record(step, 1.0)
+    mon.record(4, 5.0)                       # fires + arms suppression
+    mon.record(5, 5.0)                       # flagged, hook suppressed
+    assert len(mon.events) == 2 and len(hook) == 1
+    assert mon.hook_fires == 1
+    mon.record(6, 1.0)                       # 2 normal steps re-arm...
+    mon.record(7, 1.0)
+    mon.record(8, 5.0)                       # ...so this fires again
+    assert len(hook) == 2 and mon.hook_fires == 2
+    assert len(mon.events) == 3              # every flag recorded
+
+
+def test_straggler_flags_are_logged_as_events():
+    EVENTS.clear()
+    mon = StragglerMonitor(threshold=2.0, warmup=2, rearm=1)
+    for step in range(4):
+        mon.record(step, 1.0)
+    mon.record(4, 5.0)
+    mon.record(5, 5.0)                       # suppressed flag still logs
+    evs = EVENTS.recent(kind="straggler.flagged")
+    assert len(evs) == 2
+    assert evs[0]["suppressed"] is False
+    assert evs[1]["suppressed"] is True
+    assert evs[0]["ratio"] == pytest.approx(5.0)
+
+
+def test_straggler_rearm_validation():
+    with pytest.raises(ValueError):
+        StragglerMonitor(rearm=-1)
 
 
 def test_choose_mesh_shape_prefers_model_divisors():

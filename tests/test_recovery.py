@@ -1,0 +1,178 @@
+"""Plan-preserving failure recovery: blind checkpoint restore, the
+zero-cold-replan restart guarantee, snapshot validation (calibration
+identity, floor drift), and the watchdog-armed RecoveryManager."""
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore_blind, save
+from repro.core.plan import STATS, plan_cache_stats
+from repro.core.resources import ResourceBudget
+from repro.models.frontends import init_cnn_frontend
+from repro.obs import EVENTS
+from repro.runtime import (AdaptiveServer, RecoveryManager, SLOScheduler,
+                           SLOSpec, recover_server, simulate_worker_death,
+                           snapshot_server)
+from repro.runtime.recovery import cold_replans_since
+
+DEVICE = ResourceBudget(vpu_ops_budget=15_000_000)
+
+
+def _frontend(key=0, channels=(6, 12), d_model=16):
+    return init_cnn_frontend(jax.random.PRNGKey(key), channels=channels,
+                             d_model=d_model)
+
+
+def _deployment():
+    srv = AdaptiveServer(DEVICE, policy="demand", max_batch=4)
+    sched = SLOScheduler(srv)
+    sched.register("a", _frontend(0), (12, 12, 6),
+                   slo=SLOSpec(deadline_s=60.0, priority=1))
+    sched.register("b", _frontend(1), (12, 12, 6),
+                   slo=SLOSpec(deadline_s=120.0))
+    return srv, sched
+
+
+def _wave(sched, rng, n=4):
+    for _ in range(n):
+        sched.submit("a", rng.normal(size=(12, 12, 6)).astype(np.float32))
+        sched.submit("b", rng.normal(size=(12, 12, 6)).astype(np.float32))
+    return sched.run()
+
+
+# --------------------------------------------------------------------------
+# Blind restore: the crash-recovery entry point
+# --------------------------------------------------------------------------
+def test_restore_blind_rebuilds_without_target(tmp_path):
+    tree = {"m": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                  "blocks": [np.ones((2,), np.float32),
+                             (np.zeros((3,), np.float32),)]}}
+    save(tmp_path, 1, tree, extra={"k": 7})
+    got, extra = restore_blind(tmp_path)
+    assert extra == {"k": 7}
+    assert set(got) == {"m"}
+    np.testing.assert_array_equal(got["m"]["w"], tree["m"]["w"])
+    assert isinstance(got["m"]["blocks"], list)
+    assert isinstance(got["m"]["blocks"][1], tuple)
+    np.testing.assert_array_equal(got["m"]["blocks"][1][0],
+                                  tree["m"]["blocks"][1][0])
+
+
+def test_restore_blind_requires_structure_spec(tmp_path):
+    tree = {"w": np.ones((2,), np.float32)}
+    save(tmp_path, 1, tree)
+    d = tmp_path / "step_000000001"
+    manifest = json.loads((d / "manifest.json").read_text())
+    manifest["structure"] = None          # a custom-node checkpoint
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError):
+        restore_blind(tmp_path)
+
+
+# --------------------------------------------------------------------------
+# The headline guarantee: restart re-plans ZERO cold graphs
+# --------------------------------------------------------------------------
+def test_recover_replans_nothing_cold(tmp_path):
+    srv, sched = _deployment()
+    rng = np.random.default_rng(0)
+    # two identical waves settle the demand EWMA at the mix's fixed
+    # point, so the post-crash wave re-arbitrates to the same grants
+    _wave(sched, rng)
+    _wave(sched, rng)
+    grants_before = {n: t.granted for n, t in srv.tenants.items()}
+    snapshot_server(srv, tmp_path, 1, scheduler=sched)
+
+    simulate_worker_death()
+    assert plan_cache_stats()["size"] == 0       # the crash was real
+
+    before = STATS.plan_misses
+    srv2, sched2 = recover_server(tmp_path)
+    assert sched2 is not None
+    assert sched2.slos == sched.slos
+    assert srv2.clock == pytest.approx(srv.clock)
+    for n, g in grants_before.items():
+        assert srv2.tenants[n].granted == pytest.approx(g)
+    comps = _wave(sched2, np.random.default_rng(0))
+    assert len(comps) == 8                       # serving resumed
+    assert cold_replans_since(before) == 0       # and NOTHING planned cold
+
+
+def test_recover_without_scheduler_state(tmp_path):
+    srv = AdaptiveServer(DEVICE, max_batch=4)
+    srv.register("a", _frontend(0), (12, 12, 6))
+    rng = np.random.default_rng(0)
+    srv.submit("a", rng.normal(size=(12, 12, 6)).astype(np.float32))
+    srv.step()
+    snapshot_server(srv, tmp_path, 1)
+    simulate_worker_death()
+    srv2, sched2 = recover_server(tmp_path)
+    assert sched2 is None
+    assert set(srv2.tenants) == {"a"}
+
+
+# --------------------------------------------------------------------------
+# Snapshot validation: wrong deployment is rejected, not half-restored
+# --------------------------------------------------------------------------
+def test_recover_rejects_calibration_mismatch(tmp_path):
+    srv, sched = _deployment()
+    snapshot_server(srv, tmp_path, 1, scheduler=sched)
+
+    class OtherTable:
+        def key(self):
+            return ("other-table", 42)
+
+    with pytest.raises(ValueError, match="calibration mismatch"):
+        recover_server(tmp_path, calibration=OtherTable())
+
+
+def test_recover_rejects_floor_drift(tmp_path):
+    srv, sched = _deployment()
+    snapshot_server(srv, tmp_path, 1, scheduler=sched)
+    step_dir = next(p for p in Path(tmp_path).iterdir()
+                    if p.name.startswith("step_"))
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    manifest["extra"]["tenants"]["a"]["floor"] += 0.05   # drifted deploy
+    (step_dir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="floor drifted"):
+        recover_server(tmp_path)
+
+
+# --------------------------------------------------------------------------
+# RecoveryManager: watchdog wiring + adopt-the-replacement
+# --------------------------------------------------------------------------
+def test_recovery_manager_snapshot_kill_recover(tmp_path):
+    srv, sched = _deployment()
+    rng = np.random.default_rng(0)
+    _wave(sched, rng)
+    _wave(sched, rng)
+    mgr = RecoveryManager(srv, tmp_path, scheduler=sched)
+    mgr.snapshot()
+    simulate_worker_death()
+    before = STATS.plan_misses
+    replacement = mgr.recover()
+    assert replacement is not srv                # adopted the new server
+    assert mgr.server is replacement
+    assert mgr.scheduler is not None and mgr.scheduler is not sched
+    _wave(mgr.scheduler, np.random.default_rng(0))
+    assert cold_replans_since(before) == 0
+
+
+def test_recovery_manager_watchdog_detects_silence(tmp_path):
+    EVENTS.clear()
+    srv, sched = _deployment()
+    died = []
+    mgr = RecoveryManager(srv, tmp_path, scheduler=sched,
+                          heartbeat_timeout_s=0.05,
+                          on_death=lambda: died.append(1))
+    try:
+        deadline = time.monotonic() + 2.0
+        while not died and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        mgr.stop()
+    assert died
+    assert EVENTS.recent(kind="recovery.heartbeat_lost")
