@@ -35,6 +35,13 @@ Paper tables (the reproduction targets):
       p95 wall latency AND deadline-miss rate on every mix), plus the
       plan-preserving kill/recover scenario (snapshot -> simulated
       death -> restore must re-plan ZERO cold graphs)
+  table_chaos            — fault injection + degraded-mesh survival:
+      guarded serving must hold >=99% availability through a NaN
+      batch, a corrupted collective, a kernel exception, a latency
+      spike, and a device loss — degrading 2 -> 1 devices with ZERO
+      cold re-plans (spares pre-warmed) and bounded p95 inflation —
+      while the unguarded baseline collapses on the same schedule;
+      armed-but-idle injection must be bit-transparent
 
 System benches:
   bench_kernels     — us/call for every kernel family member
@@ -1254,6 +1261,96 @@ def table_slo(smoke: bool = False):
          f";recovered_ok=1")
 
 
+# ---------------------------------------------------------------------------
+# Table X — chaos: fault injection + degraded-mesh survival.  Three
+# asserted arms over the same deterministic Poisson traffic (see
+# benchmarks/_chaos_child.py for the workload):
+# (a) TRANSPARENCY: a serving trace with the injector armed on a
+#     never-firing schedule must be bit-identical (outputs, completion
+#     times, modeled percentiles) to the disarmed trace — injection
+#     must cost nothing when it does nothing;
+# (b) SURVIVAL: the guarded deployment (output screening + retry_f32,
+#     bounded deadline-aware retry, spare plans pre-warmed) must hold
+#     availability >= 99% through one fault of every scheduled kind —
+#     NaN batch, corrupted collective, kernel exception, latency
+#     spike, device loss — while degrading 2 -> 1 devices with ZERO
+#     cold re-plans, every plan still f32 (the degree ladder descends
+#     BEFORE the precision ladder), and modeled p95 inflation bounded;
+# (c) BASELINE: the identical schedule against an unguarded server
+#     must collapse (poisoned answers served, batches lost, every
+#     post-loss batch dead on the corpse) — the failure the survival
+#     machinery exists to prevent.
+# ``budget_shrink`` is deliberately absent from the chaos schedule: a
+# shrunk budget re-keys every plan, so it cannot coexist with the
+# zero-cold-replan assertion (its seam is covered by tests/test_faults
+# and the on_budget_shrink unit path).
+# Runs in a subprocess under XLA_FLAGS=--xla_force_host_platform_
+# device_count=2 (JAX fixes its device count at import).
+# ---------------------------------------------------------------------------
+def table_chaos(smoke: bool = False):
+    import os
+    import subprocess
+    import sys
+    print("# Table X — fault injection + degraded-mesh survival: "
+          "guarded serving must hold >=99% availability through "
+          "nan/collective/kernel/latency/device-loss faults with zero "
+          "cold re-plans (spares pre-warmed) vs an unguarded baseline "
+          "that collapses; armed-but-idle injection bit-transparent")
+    child = Path(__file__).resolve().parent / "_chaos_child.py"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    soak = 2 if smoke else max(REPEAT, 3)
+    proc = subprocess.run(
+        [sys.executable, str(child), str(soak)], env=env,
+        capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"chaos child failed:\n{proc.stderr[-4000:]}")
+    rec = json.loads(proc.stdout.splitlines()[-1])
+    assert rec["devices"] == 2, \
+        f"forced host mesh did not take: {rec['devices']} device(s)"
+    # (a) armed-but-never-firing == disarmed, bit for bit
+    assert rec["transparent"], "idle injection perturbed the serving trace"
+    ch, base = rec["chaos"], rec["baseline"]
+    # (b) the guarded arm survives every fault
+    assert ch["availability"] >= 0.99, \
+        f"guarded availability collapsed: {ch}"
+    expected = {"nan_output", "collective_corrupt", "kernel_exception",
+                "latency_spike", "device_loss"}
+    assert set(ch["faults_fired"]) == expected, \
+        f"schedule did not fire every kind: {ch['faults_fired']}"
+    assert ch["cold_plans"] == 0, \
+        f"degradation planned cold despite pre-warmed spares: {ch}"
+    assert ch["devices_after"] == 1 and ch["degradations"] >= 1, \
+        f"device loss did not degrade the mesh: {ch}"
+    assert set(ch["shard_degree_mix"]) == {"1", "2"}, \
+        f"serving never walked the degree ladder 2 -> 1: {ch}"
+    assert set(ch["precision_mix"]) == {"32"}, \
+        f"degradation moved precision, not (just) degree: {ch}"
+    inflation = (ch["p95_cycles_chaos"] / ch["p95_cycles_healthy"]
+                 if ch["p95_cycles_healthy"] else float("inf"))
+    assert inflation < 5.0, \
+        f"modeled p95 inflated {inflation:.2f}x under faults: {ch}"
+    assert ch["deadline_miss_rate"] == 0.0, \
+        f"generous deadlines still missed: {ch}"
+    emit("table_chaos.survives", 0.0,
+         f"availability={ch['availability']:.4f};available_ge_target=1"
+         f";degraded_cold_plans={ch['cold_plans']}"
+         f";spares_prewarmed={ch['spares_prewarmed']}"
+         f";faults_fired={len(ch['faults_fired'])}"
+         f";guard_retries={ch['guard_retries']}"
+         f";devices=2to{ch['devices_after']}"
+         f";p95_inflation={inflation:.2f};transparent=1")
+    # (c) the unguarded baseline loses what the guards save
+    assert base["availability"] < 0.99, \
+        f"unguarded baseline did not degrade: {base}"
+    assert base["served_ok"] < ch["served_ok"], \
+        f"guards did not out-serve the baseline: {base} vs {ch}"
+    emit("table_chaos.baseline_dies", 0.0,
+         f"availability={base['availability']:.4f};baseline_fails=1"
+         f";lost_batches={base['lost_batches']}"
+         f";served_ok={base['served_ok']}of{base['submitted']}")
+
+
 BENCHES = {
     "table1": table1_ip_characteristics,
     "table2": table2_resource_utilization,
@@ -1265,6 +1362,7 @@ BENCHES = {
     "table_mesh": table_mesh,
     "table_obs": table_obs,
     "table_slo": table_slo,
+    "table_chaos": table_chaos,
     "kernels": bench_kernels,
     "quantize": bench_quantize,
     "train_step": bench_train_step,

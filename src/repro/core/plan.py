@@ -223,6 +223,21 @@ def plan_cache_stats() -> dict:
     }
 
 
+def plan_cache_contains(specs, budget: Optional[ResourceBudget] = None, *,
+                        fuse: bool = True, calibration=None,
+                        mesh: Optional[MeshSpec] = None) -> bool:
+    """True when the exact ``plan_network`` cache key is already warm.
+
+    A pure membership probe — neither a hit nor a miss is counted and
+    recency is untouched — so spare-plan pre-warming
+    (``AdaptiveServer.prewarm_spares``) and the chaos gate can assert
+    "this degraded-mesh key will serve hot" without perturbing the very
+    statistics the zero-cold-replan claim is judged on."""
+    budget = budget or ResourceBudget()
+    key = (tuple(specs), budget, fuse, mesh, calibration_key(calibration))
+    return key in _PLAN_CACHE
+
+
 def _cache_get(key) -> Optional["NetworkPlan"]:
     plan = _PLAN_CACHE.pop(key, None)
     if plan is not None:

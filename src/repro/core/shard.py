@@ -55,6 +55,30 @@ FULL = ("full", 1)
 AXES = ("batch", "chan")
 
 
+def degree_ladder(degree: int, *,
+                  survivors: Optional[int] = None) -> Tuple[int, ...]:
+    """The shard-degree degradation ladder of a plan serving at
+    ``degree``: every divisor of ``degree``, descending.
+
+    Divisors are the rungs because any batch that tiled evenly at
+    ``degree`` still tiles at each of them — descending the ladder
+    changes *parallelism*, never feasibility of the shapes already in
+    flight.  ``survivors=`` caps the ladder at the devices actually
+    left, so ``degree_ladder(d, survivors=s)[0]`` is the widest degree
+    a degraded grant of ``s`` devices can still serve.  This is the
+    rung order the runtime's device-loss path walks — the degree ladder
+    descends *before* the precision ladder does (the shrunk sub-mesh
+    still plans each device against the full per-device budget)."""
+    if degree < 1:
+        raise ValueError("degree must be >= 1")
+    rungs = tuple(k for k in range(degree, 0, -1) if degree % k == 0)
+    if survivors is not None:
+        if survivors < 1:
+            raise ValueError("survivors must be >= 1")
+        rungs = tuple(k for k in rungs if k <= survivors)
+    return rungs
+
+
 @dataclasses.dataclass(frozen=True)
 class SiteSharding:
     """One site's resolved sharding: the axis and degree the DP chose,

@@ -41,6 +41,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.plan import NetworkPlan, PlannedSite
 from repro.core.shard import FULL, output_layout, required_input_layout
 from repro.obs.trace import NOOP_SPAN, TRACER
+from repro.runtime.faults import INJECTOR
 
 _CHAIN_FAMILIES = ("conv2d", "pool2d", "activation", "cnn_fused")
 
@@ -187,4 +188,10 @@ def apply_plan_sharded(plan: NetworkPlan, x: jnp.ndarray,
                        "comm_cycles": sum(s.footprint.comm_cycles
                                           for s in plan.sites)})
           if TRACER.enabled else NOOP_SPAN):
-        return fn(x, dict(weights))
+        y = fn(x, dict(weights))
+    if INJECTOR.enabled:
+        # injection seam "collective": corruption lands on the gathered
+        # result, after the collectives (inside shard_map is traced
+        # code — a host-side perturbation there would be wrong anyway)
+        y = INJECTOR.perturb_output("collective", y)
+    return y

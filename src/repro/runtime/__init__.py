@@ -7,10 +7,18 @@ shape-bucketed batching, live re-planning (docs/adaptive_ips.md,
 continuous-batching dispatch loop and ``recovery.py`` the
 plan-preserving restart path on top of ``fault_tolerance.py``'s
 watchdog / straggler / elastic-remesh hooks (docs/adaptive_ips.md,
-"Scheduling & recovery contract").
+"Scheduling & recovery contract").  ``faults.py`` (deterministic fault
+injection) and ``guards.py`` (output screening + bounded deadline-aware
+retry + degraded-mesh survival) are the chaos half
+(docs/adaptive_ips.md, "Fault-injection & degradation contract").
 """
 from repro.runtime.arbiter import BudgetArbiter, TenantShare
 from repro.runtime.batching import Request, ShapeBucketQueue
+from repro.runtime.faults import (FAULT_KINDS, INJECTOR, DeviceLost,
+                                  FaultInjector, FaultSpec, InjectedFault)
+from repro.runtime.guards import (GuardPolicy, GuardReport, GuardViolation,
+                                  backoff_schedule, execute_guarded,
+                                  screen_finite)
 from repro.runtime.recovery import (RecoveryManager, recover_server,
                                     simulate_worker_death, snapshot_server)
 from repro.runtime.scheduler import SLOScheduler, SLOSpec
@@ -18,8 +26,11 @@ from repro.runtime.server import AdaptiveServer, Completion, Tenant
 from repro.runtime.telemetry import TenantTelemetry
 
 __all__ = [
-    "AdaptiveServer", "BudgetArbiter", "Completion", "RecoveryManager",
-    "Request", "SLOScheduler", "SLOSpec", "ShapeBucketQueue", "Tenant",
-    "TenantShare", "TenantTelemetry", "recover_server",
-    "simulate_worker_death", "snapshot_server",
+    "AdaptiveServer", "BudgetArbiter", "Completion", "DeviceLost",
+    "FAULT_KINDS", "FaultInjector", "FaultSpec", "GuardPolicy",
+    "GuardReport", "GuardViolation", "INJECTOR", "InjectedFault",
+    "RecoveryManager", "Request", "SLOScheduler", "SLOSpec",
+    "ShapeBucketQueue", "Tenant", "TenantShare", "TenantTelemetry",
+    "backoff_schedule", "execute_guarded", "recover_server",
+    "screen_finite", "simulate_worker_death", "snapshot_server",
 ]

@@ -35,6 +35,7 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.core.resources import MeshSpec, ResourceBudget
+from repro.core.shard import degree_ladder
 from repro.obs.trace import NOOP_SPAN, TRACER, log_event
 
 POLICIES = ("demand", "static")
@@ -244,14 +245,16 @@ class BudgetArbiter:
                                devices=self._devices.get(m, 0))
                 for m in self._floors}
 
-    def _device_grants(self, granted: Dict[str, float]) -> Dict[str, int]:
+    def _device_grants(self, granted: Dict[str, float],
+                       devices: Optional[int] = None) -> Dict[str, int]:
         """Mesh mode: the fractional grants rounded to whole devices —
         every tenant floored at ONE device, the rest split by largest
         remainder (deterministic: remainder then name).  Empty when not
-        in mesh mode."""
+        in mesh mode.  ``devices=`` overrides the pool size (the
+        device-loss path previews grants on the shrunk mesh)."""
         if self.mesh is None or not granted:
             return {}
-        d = self.mesh.devices
+        d = devices if devices is not None else self.mesh.devices
         names = list(granted)
         spare = d - len(names)
         raw = {m: max(granted[m] * d - 1.0, 0.0) for m in names}
@@ -294,6 +297,75 @@ class BudgetArbiter:
         log_event("arbiter.preempt", winner=winner, victim=victim,
                   moved=freed, total=self.preemptions)
         return freed
+
+    # -- degraded mesh (device loss) -----------------------------------------
+    def _ladder_snap(self, raw: Dict[str, int],
+                     prior: Dict[str, int]) -> Dict[str, int]:
+        """Snap each tenant's shrunk device grant DOWN its degree ladder
+        (largest divisor of the pre-loss grant that fits) so every batch
+        shape that sharded before still shards on the degraded slice —
+        correctness first, utilization second (leftover devices idle).
+        Grants that grew (or held) pass through unchanged."""
+        out = {}
+        for name, g in raw.items():
+            p = prior.get(name, g)
+            if 0 < g < p:
+                g = degree_ladder(p, survivors=g)[0]
+            out[name] = g
+        return out
+
+    def degraded_grants(self, losses: int = 1) -> Dict[str, int]:
+        """Pure preview of the whole-device grants after losing
+        ``losses`` devices — what spare-plan pre-warming
+        (``AdaptiveServer.prewarm_spares``) plans against *before* any
+        fault fires.  No state moves."""
+        if self.mesh is None:
+            raise ValueError("degraded_grants() is mesh-mode only")
+        survivors = self.mesh.devices - int(losses)
+        if survivors < len(self._floors):
+            raise ValueError(
+                f"losing {losses} device(s) leaves {survivors} for "
+                f"{len(self._floors)} tenants — every tenant holds at "
+                f"least one whole device")
+        raw = self._device_grants(self._granted, devices=survivors)
+        return self._ladder_snap(raw, self._devices or raw)
+
+    def on_device_loss(self, device: Optional[int] = None) -> list:
+        """Shrink the mesh by one device and re-grant whole-device
+        slices on the survivors — device loss handled as a budget shock.
+
+        The pool size comes from ``fault_tolerance.choose_mesh_shape``
+        (correctness-first: the usable pool is the best grid the
+        survivors can still form against the pre-loss mesh) and each
+        shrunk tenant descends its ``degree_ladder`` (largest divisor of
+        its pre-loss grant), so surviving batch shapes keep sharding.
+        Raises when fewer devices than tenants survive — degradation
+        cannot evict.  Returns the tenants whose grant moved (the ones
+        the server re-plans); logs ``mesh.degraded``."""
+        if self.mesh is None:
+            raise ValueError("on_device_loss() is mesh-mode only")
+        survivors = self.mesh.devices - 1
+        if survivors < len(self._floors):
+            raise ValueError(
+                f"degraded mesh has {survivors} device(s) for "
+                f"{len(self._floors)} tenants — every tenant holds at "
+                f"least one whole device; recover instead of degrading")
+        from repro.runtime.fault_tolerance import choose_mesh_shape
+        data, model = choose_mesh_shape(survivors,
+                                        prefer_model=self.mesh.devices)
+        usable = max(data * model, len(self._floors))
+        before = dict(self._devices)
+        self.mesh = dataclasses.replace(self.mesh, devices=usable)
+        raw = self._device_grants(self._granted, devices=usable)
+        self._devices = self._ladder_snap(raw, before or raw)
+        self.rebalances += 1
+        affected = sorted(m for m in self._floors
+                          if self._devices.get(m) != before.get(m))
+        log_event("mesh.degraded",
+                  lost=-1 if device is None else int(device),
+                  devices=usable, affected=len(affected),
+                  total=self.rebalances)
+        return affected
 
     def shares(self) -> Dict[str, TenantShare]:
         """The current grants as ``TenantShare`` rows without folding

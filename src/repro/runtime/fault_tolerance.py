@@ -59,6 +59,21 @@ class Watchdog:
     def fired(self) -> bool:
         return self._fired
 
+    def rearm(self) -> "Watchdog":
+        """Clear a latched ``fired`` and restart the beat window.
+
+        ``fired`` otherwise latches forever, so a deployment that
+        recovered from one hang could never distinguish a SECOND one
+        from the stale flag.  ``RecoveryManager.recover()`` re-arms
+        after adopting the replacement server; callers with a live
+        monitor thread can re-arm in place, callers whose ``on_timeout``
+        stopped the watchdog (the fire-once pattern) need a fresh
+        ``Watchdog`` instead — ``rearm`` does not resurrect a joined
+        thread."""
+        self._fired = False
+        self._last_beat = time.monotonic()
+        return self
+
     def _loop(self):
         while not self._stop.wait(min(self.timeout_s / 4, 1.0)):
             if (time.monotonic() - self._last_beat > self.timeout_s
@@ -135,15 +150,22 @@ class StragglerMonitor:
 
 # ---------------------------------------------------------------------------
 # Elastic re-mesh: pick the best (data, model) mesh for surviving devices.
+# Both helpers are expressed over core.shard.degree_ladder — the same
+# divisor chain the arbiter's device-loss path descends (the degraded-
+# mesh wiring in runtime/arbiter.py and runtime/server.py).
 # ---------------------------------------------------------------------------
 def choose_mesh_shape(n_devices: int, *, prefer_model: int = 16,
                       min_model: int = 1) -> tuple:
     """Largest (data, model) grid with model | prefer_model, covering as
     many surviving devices as possible (some may idle — correctness
-    first, utilization second)."""
+    first, utilization second).  The model-degree candidates are exactly
+    ``degree_ladder(prefer_model, survivors=n_devices)`` — a surviving
+    model degree must keep the pre-loss model sharding divisible."""
+    from repro.core.shard import degree_ladder
     best = (1, 1)
-    for model in range(min(prefer_model, n_devices), min_model - 1, -1):
-        if prefer_model % model:
+    for model in degree_ladder(prefer_model,
+                               survivors=min(prefer_model, n_devices)):
+        if model < min_model:
             continue
         data = n_devices // model
         if data * model > best[0] * best[1]:
@@ -151,9 +173,27 @@ def choose_mesh_shape(n_devices: int, *, prefer_model: int = 16,
     return best
 
 
-def elastic_remesh(n_devices: int, prefer_model: int = 16):
-    """Build a mesh over the first n_devices surviving devices."""
+def elastic_remesh(n_devices: int, prefer_model: int = 16, *,
+                   axis: Optional[str] = None, offset: int = 0):
+    """Build a ``jax.sharding.Mesh`` over surviving devices.
+
+    Default (``axis=None``): the training-style 2-D ("data", "model")
+    grid over the first devices, shaped by ``choose_mesh_shape``.
+
+    ``axis=`` (serving mode — what ``AdaptiveServer`` executes degraded
+    tenants through): a 1-D mesh named ``axis`` over the contiguous
+    device slice ``jax.devices()[offset : offset + n_devices]`` — the
+    tenant's granted slice on the (possibly shrunk) pool."""
     import numpy as np
+    devs = jax.devices()
+    if axis is not None:
+        pool = devs[offset:offset + n_devices]
+        if len(pool) < n_devices:
+            raise ValueError(
+                f"mesh wants devices [{offset}, {offset + n_devices}) but "
+                f"only {len(devs)} exist (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count)")
+        return jax.sharding.Mesh(np.array(pool), (axis,))
     data, model = choose_mesh_shape(n_devices, prefer_model=prefer_model)
-    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
-    return jax.sharding.Mesh(devs, ("data", "model"))
+    grid = np.array(devs[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))

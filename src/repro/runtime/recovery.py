@@ -92,6 +92,8 @@ def server_state(server: AdaptiveServer,
             } for name, t in server.tenants.items()
         },
         "arbiter": server.arbiter.state_dict(),
+        "guards": {name: dataclasses.asdict(p)
+                   for name, p in server._guards.items()},
         "plan_cache": export_plan_cache(),
         "calibration_key": _calkey_json(server.calibration),
         "clock": server.clock,
@@ -159,6 +161,9 @@ def recover_server(ckpt_dir: str, *, step: Optional[int] = None,
     server.arbiter.load_state(extra["arbiter"])
     server._apply_shares(server.arbiter.shares())
     server.clock = float(extra.get("clock", 0.0))
+    from repro.runtime.guards import GuardPolicy
+    for name, p in extra.get("guards", {}).items():
+        server.set_guard(name, GuardPolicy(**p))
     scheduler = None
     if extra.get("scheduler") is not None:
         scheduler = (SLOScheduler(server, wall=wall)
@@ -206,17 +211,37 @@ class RecoveryManager:
         self.keep = keep
         self._step = 0
         self.watchdog = None
+        self._heartbeat_timeout_s = heartbeat_timeout_s
+
+        def _fire():
+            log_event("recovery.heartbeat_lost",
+                      timeout_s=heartbeat_timeout_s)
+            if on_death is not None:
+                on_death()
+        self._fire = _fire
         if heartbeat_timeout_s is not None:
-            def _fire():
-                log_event("recovery.heartbeat_lost",
-                          timeout_s=heartbeat_timeout_s)
-                if on_death is not None:
-                    on_death()
             self.watchdog = Watchdog(heartbeat_timeout_s, _fire).start()
 
     def beat(self) -> None:
         if self.watchdog is not None:
             self.watchdog.beat()
+
+    def _rearm_watchdog(self) -> None:
+        """Re-arm heartbeat monitoring after an adoption or a degrade:
+        a live monitor thread just clears its latched ``fired``
+        (``Watchdog.rearm``); a stopped one (the fire-once pattern
+        joins its thread inside ``on_timeout``) is replaced — either
+        way, a SECOND worker death after one recovery fires again."""
+        if self._heartbeat_timeout_s is None:
+            return
+        wd = self.watchdog
+        if wd is not None and wd._thread.is_alive():
+            wd.rearm()
+            return
+        if wd is not None:
+            wd.stop()
+        self.watchdog = Watchdog(self._heartbeat_timeout_s,
+                                 self._fire).start()
 
     def snapshot(self) -> str:
         self._step += 1
@@ -227,10 +252,24 @@ class RecoveryManager:
                 wall: Optional[Callable] = None) -> AdaptiveServer:
         """Rebuild from the latest snapshot and adopt the replacement
         (``self.server`` / ``self.scheduler`` point at the new
-        instances afterwards)."""
+        instances afterwards).  The heartbeat watchdog is re-armed —
+        its ``fired`` latch cleared, its thread restarted if the first
+        death stopped it — so a second worker death fires again."""
         self.server, self.scheduler = recover_server(
             self.ckpt_dir, calibration=calibration, wall=wall)
+        if self.scheduler is not None:
+            self.scheduler.recovery = self
+        self._rearm_watchdog()
         return self.server
+
+    def degrade(self, device: Optional[int] = None) -> list:
+        """The heartbeat path's lighter-than-restore alternative: treat
+        the silence as a lost device, shrink the mesh in place
+        (``AdaptiveServer.on_device_loss``), and re-arm the watchdog so
+        a SECOND failure still fires.  Returns the affected tenants."""
+        affected = self.server.on_device_loss(device)
+        self._rearm_watchdog()
+        return affected
 
     def stop(self) -> None:
         if self.watchdog is not None:

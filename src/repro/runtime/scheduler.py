@@ -109,13 +109,17 @@ class SLOScheduler:
 
     def __init__(self, server: AdaptiveServer, *,
                  wall: Callable[[], float] = time.monotonic,
-                 shed_margin_s: float = 0.0):
+                 shed_margin_s: float = 0.0, recovery=None):
         if server.pending():
             raise ValueError("attach the scheduler before submitting "
                              "requests to the server")
         self.server = server
         self.wall = wall
         self.shed_margin_s = float(shed_margin_s)
+        # optional RecoveryManager: every healthy launch beats its
+        # heartbeat watchdog, so dispatch stalls — not just process
+        # death — trip the recovery path
+        self.recovery = recovery
         self.slos: Dict[str, SLOSpec] = {}
         self._buckets: Dict[Tuple, _Bucket] = {}
         self._bucket_seq = 0
@@ -289,19 +293,28 @@ class SLOScheduler:
 
     def _launch(self, key: Tuple) -> List[Completion]:
         """Execute up to ``max_batch`` earliest-deadline requests of one
-        bucket and judge them on the wall clock."""
+        bucket and judge them on the wall clock.  The batch's tightest
+        remaining deadline budget rides along so a guarded execution's
+        retries are charged against it (``runtime/guards.py``); a
+        guard-failed completion (``ok=False``) counts as a miss for the
+        arbiter's SLO pressure."""
         bucket = self._buckets[key]
         bucket.items.sort(key=lambda a: (a.deadline_wall, a.req.rid))
         take = bucket.items[:self.server.max_batch]
         bucket.items = bucket.items[self.server.max_batch:]
         if not bucket.items:
             del self._buckets[key]
-        comps = self.server._execute([a.req for a in take])
+        budget_s = min(a.deadline_wall for a in take) - self.wall()
+        comps = self.server._execute([a.req for a in take],
+                                     deadline_budget_s=max(budget_s, 0.0))
         w = self.wall()
         walls = [w - a.admitted_wall for a in take]
-        missed = 0
-        for adm in take:
-            if w > adm.deadline_wall:
+        missed = failed = 0
+        for adm, c in zip(take, comps):
+            if not c.ok:
+                failed += 1
+                self.outcomes[adm.req.rid] = "rejected"
+            elif w > adm.deadline_wall:
                 missed += 1
                 self.outcomes[adm.req.rid] = "miss"
             else:
@@ -309,10 +322,12 @@ class SLOScheduler:
         name = key[0]
         self.server.tenants[name].telemetry.record_slo_batch(walls, missed)
         self.server.arbiter.record_outcome(name, served=len(take),
-                                           missed=missed)
-        if missed:
+                                           missed=missed + failed)
+        if missed or failed:
             self._dirty = True
         self.launches += 1
+        if self.recovery is not None:
+            self.recovery.beat()
         return comps
 
     def run(self, max_launches: int = 100_000) -> List[Completion]:

@@ -40,9 +40,11 @@ from repro.core.plan import (STATS, network_min_fraction, plan_network,
                              replan)
 from repro.core.resources import MeshSpec, ResourceBudget
 from repro.models.frontends import apply_cnn_frontend, cnn_frontend_site_specs
-from repro.obs.trace import NOOP_SPAN, TRACER
+from repro.obs.trace import NOOP_SPAN, TRACER, log_event
 from repro.runtime.arbiter import BudgetArbiter, TenantShare
 from repro.runtime.batching import Request, ShapeBucketQueue
+from repro.runtime.faults import INJECTOR, InjectedFault
+from repro.runtime.guards import GuardPolicy, execute_guarded
 from repro.runtime.telemetry import TenantTelemetry
 
 _SIDE_CACHE_MAX = 256   # bound for the tile- and specs-caches
@@ -68,7 +70,9 @@ class Tenant:
 
 @dataclasses.dataclass(frozen=True)
 class Completion:
-    """One served request: result + accounting."""
+    """One served request: result + accounting.  ``ok=False`` means the
+    execution guard gave the batch up (rejected or shed) — ``result`` is
+    None and the lane did not advance."""
 
     rid: int
     tenant: str
@@ -76,6 +80,7 @@ class Completion:
     arrival: float
     finished: float
     batch_size: int
+    ok: bool = True
 
     @property
     def latency(self) -> float:
@@ -133,6 +138,9 @@ class AdaptiveServer:
         self.tenants: Dict[str, Tenant] = {}
         self._queue = ShapeBucketQueue()
         self._shares: Dict[str, TenantShare] = {}
+        # opt-in per-tenant survival policies (runtime/guards.py); a
+        # tenant without one executes bare — faults propagate
+        self._guards: Dict[str, GuardPolicy] = {}
         self._tile_cache: Dict[tuple, dict] = {}
         # bucket key -> site specs: spec construction runs jax.eval_shape
         # per block, so hot repeat buckets must not rebuild them
@@ -182,6 +190,22 @@ class AdaptiveServer:
         self.arbiter.register(name, floor)
         self.tenants[name] = tenant
         return tenant
+
+    def set_guard(self, name: str,
+                  policy: Optional[GuardPolicy]) -> None:
+        """Opt tenant ``name`` into guarded execution (output screening
+        + bounded deadline-aware retry + degrade-on-device-loss; see
+        ``runtime/guards.py``).  ``None`` clears the policy — the tenant
+        executes bare again and faults propagate to the caller."""
+        if name not in self.tenants:
+            raise KeyError(f"tenant {name!r} is not registered")
+        if policy is None:
+            self._guards.pop(name, None)
+        else:
+            self._guards[name] = policy
+
+    def guard_for(self, name: str) -> Optional[GuardPolicy]:
+        return self._guards.get(name)
 
     @staticmethod
     def _specs(params, batch_shape, dtype, pool_window, activation, ladder):
@@ -254,7 +278,9 @@ class AdaptiveServer:
             out.extend(self.step())
         return out
 
-    def _execute(self, batch: List[Request]) -> List[Completion]:
+    def _execute(self, batch: List[Request], *,
+                 deadline_budget_s: Optional[float] = None
+                 ) -> List[Completion]:
         # Tracing contract: the disabled path costs one attribute read
         # and one branch per span site — no argument dicts, no span
         # objects (NOOP_SPAN is the shared singleton).
@@ -262,32 +288,59 @@ class AdaptiveServer:
                           {"tenant": batch[0].tenant,
                            "batch": len(batch)})
               if TRACER.enabled else NOOP_SPAN):
-            return self._execute_batch(batch)
+            return self._execute_batch(batch,
+                                       deadline_budget_s=deadline_budget_s)
 
-    def _execute_batch(self, batch: List[Request]) -> List[Completion]:
-        tenant = self.tenants[batch[0].tenant]
-        xb = jnp.stack([r.x for r in batch])
+    def _tenant_budget(self, tenant: Tenant):
         if self.mesh is not None:
             # mesh mode: the tenant holds whole devices — plan against
             # the FULL per-device budget and let the planner decide how
             # (whether) to shard across the granted sub-mesh.
-            slice_budget = self.arbiter.budget_for(tenant.name)
-            tenant_mesh = self.arbiter.mesh_for(tenant.name)
-        else:
-            slice_budget = self.budget.scaled(tenant.granted)
-            tenant_mesh = None
-        skey = (tenant.name, xb.shape, str(xb.dtype))
+            return (self.arbiter.budget_for(tenant.name),
+                    self.arbiter.mesh_for(tenant.name))
+        return self.budget.scaled(tenant.granted), None
+
+    def _route_execute_faults(self, tenant: Tenant) -> None:
+        """Injection seam "execute": apply the faults due at this batch
+        — device loss marks the corpse, budget shrink scales the device
+        budget, a kernel exception raises (last, so co-scheduled faults
+        still land)."""
+        boom = None
+        for f in INJECTOR.poll("execute", tenant.name):
+            if f.kind == "device_loss":
+                INJECTOR.lose(int(f.param))
+            elif f.kind == "budget_shrink":
+                self.on_budget_shrink(f.param if f.param > 0 else 0.5)
+            elif f.kind == "kernel_exception":
+                boom = InjectedFault(
+                    f"injected kernel-launch failure "
+                    f"(tenant {tenant.name!r})")
+        if boom is not None:
+            raise boom
+
+    def _attempt(self, tenant: Tenant, xb, *, retry_f32: bool = False):
+        """One execution attempt: route injected faults, (re)plan under
+        the tenant's *current* slice — a degraded mesh re-plans here —
+        run the kernels, screen hooks applied by the caller.  Returns
+        ``(y, plan, quant_err)``.  ``retry_f32=True`` plans with the
+        precision ladder off (the guard's non-finite fallback)."""
+        if INJECTOR.enabled:
+            self._route_execute_faults(tenant)
+        slice_budget, tenant_mesh = self._tenant_budget(tenant)
+        ladder = () if retry_f32 else tenant.ladder
+        skey = (tenant.name, xb.shape, str(xb.dtype), ladder)
         specs = self._specs_cache.get(skey)
         if specs is None:
             specs = self._specs(tenant.params, xb.shape, xb.dtype,
                                 tenant.pool_window, tenant.activation,
-                                tenant.ladder)
+                                ladder)
             if len(self._specs_cache) >= _SIDE_CACHE_MAX:
                 self._specs_cache.pop(next(iter(self._specs_cache)))
             self._specs_cache[skey] = specs
-        hits0, misses0 = STATS.plan_hits, STATS.plan_misses
         plan = replan(specs, slice_budget, fuse=self.fuse,
                       calibration=self.calibration, mesh=tenant_mesh)
+        if INJECTOR.enabled and tenant_mesh is not None:
+            INJECTOR.check_devices(*self.arbiter.device_slice(tenant.name))
         tile_overrides = None
         if self.autotune:
             tkey = (specs, slice_budget)
@@ -298,7 +351,7 @@ class AdaptiveServer:
                 if len(self._tile_cache) >= _SIDE_CACHE_MAX:
                     self._tile_cache.pop(next(iter(self._tile_cache)))
                 self._tile_cache[tkey] = tile_overrides
-        quant_report = {} if (tenant.ladder and tenant.measure_quant) else None
+        quant_report = {} if (ladder and tenant.measure_quant) else None
         sharded = self._shardable(plan, xb)
         with (TRACER.span("kernel", "kernel",
                           {"tenant": tenant.name,
@@ -313,10 +366,54 @@ class AdaptiveServer:
                                        pool_window=tenant.pool_window,
                                        activation=tenant.activation,
                                        interpret=self.interpret,
-                                       ladder=tenant.ladder,
+                                       ladder=ladder,
                                        quant_report=quant_report,
                                        tile_overrides=tile_overrides,
                                        fuse=self.fuse)
+        if INJECTOR.enabled:
+            y = INJECTOR.perturb_output("output", y, tenant.name)
+        quant_err = 0.0
+        if quant_report:
+            from repro.quant.report import max_rel_error
+            quant_err = max_rel_error(quant_report)
+        return y, plan, quant_err
+
+    def _execute_batch(self, batch: List[Request], *,
+                       deadline_budget_s: Optional[float] = None
+                       ) -> List[Completion]:
+        tenant = self.tenants[batch[0].tenant]
+        xb = jnp.stack([r.x for r in batch])
+        hits0, misses0 = STATS.plan_hits, STATS.plan_misses
+        policy = self._guards.get(tenant.name)
+        out: Dict[str, Any] = {}
+
+        def attempt(retry_f32: bool = False):
+            y, plan, qerr = self._attempt(tenant, xb, retry_f32=retry_f32)
+            out["plan"], out["quant_err"] = plan, qerr
+            return y
+
+        if policy is None:
+            y = attempt()
+            report = None
+        else:
+            y, report = execute_guarded(
+                attempt, policy, tenant=tenant.name,
+                remaining_s=deadline_budget_s,
+                on_device_loss=lambda e: self.on_device_loss(e.device))
+            tenant.telemetry.guard_retries += report.retries
+        if y is None:
+            # the guard gave the batch up: failed completions, lane not
+            # advanced, no record_batch (there is no plan bill to pay)
+            if report.outcome == "shed":
+                tenant.telemetry.guard_shed += len(batch)
+            else:
+                tenant.telemetry.guard_rejected += len(batch)
+            start = max(tenant.lane_free, max(r.arrival for r in batch))
+            return [Completion(rid=r.rid, tenant=r.tenant, result=None,
+                               arrival=r.arrival, finished=start,
+                               batch_size=len(batch), ok=False)
+                    for r in batch]
+        plan, quant_err = out["plan"], out["quant_err"]
         start = max(tenant.lane_free, max(r.arrival for r in batch))
         if TRACER.enabled:
             TRACER.instant(
@@ -324,13 +421,12 @@ class AdaptiveServer:
                 {"tenant": tenant.name,
                  "max_wait_cycles":
                      start - min(r.arrival for r in batch)})
-        finish = start + plan.calibrated_cycles(self.calibration)
+        service = plan.calibrated_cycles(self.calibration)
+        if INJECTOR.enabled:
+            service = INJECTOR.scale_latency(service, tenant.name)
+        finish = start + service
         tenant.lane_free = finish
         latencies = [finish - r.arrival for r in batch]
-        quant_err = 0.0
-        if quant_report:
-            from repro.quant.report import max_rel_error
-            quant_err = max_rel_error(quant_report)
         tenant.telemetry.record_batch(
             len(batch), latencies, plan,
             cache_hits=STATS.plan_hits - hits0,
@@ -368,20 +464,16 @@ class AdaptiveServer:
         (``plan.device_plan()``) on its batch block; ``out_specs``
         re-tiles the result so the caller sees the replicated contract.
         Bit-identical to the replicated walk for batch sharding (tests
-        assert it)."""
-        import numpy as np
-        import jax
+        assert it).  The ``jax.sharding.Mesh`` over the tenant's device
+        slice comes from ``fault_tolerance.elastic_remesh`` — the same
+        builder the degraded path re-meshes through after a device
+        loss."""
         from jax.experimental.shard_map import shard_map
-        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.fault_tolerance import elastic_remesh
         d = plan.mesh.devices
-        start, stop = self.arbiter.device_slice(tenant.name)
-        devs = jax.devices()[start:stop]
-        if len(devs) < d:
-            raise ValueError(
-                f"tenant {tenant.name!r} was granted devices "
-                f"[{start}, {stop}) but only {len(jax.devices())} exist "
-                "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
-        mesh = Mesh(np.array(devs), (plan.mesh.axis,))
+        start, _stop = self.arbiter.device_slice(tenant.name)
+        mesh = elastic_remesh(d, axis=plan.mesh.axis, offset=start)
         dplan = plan.device_plan()
 
         def device_fn(xg):
@@ -394,7 +486,70 @@ class AdaptiveServer:
         fn = shard_map(device_fn, mesh=mesh,
                        in_specs=(P(plan.mesh.axis),),
                        out_specs=P(plan.mesh.axis), check_rep=False)
-        return fn(xb)
+        y = fn(xb)
+        if INJECTOR.enabled:
+            # injection seam "collective": the gathered result of a
+            # sharded execution (corruption lands after the collective)
+            y = INJECTOR.perturb_output("collective", y, tenant.name)
+        return y
+
+    # -- degraded mesh / fault survival --------------------------------------
+    def on_device_loss(self, device: Optional[int] = None) -> list:
+        """Degrade, don't die: shrink the mesh by one device
+        (``BudgetArbiter.on_device_loss``) and mark the affected tenants
+        — their next batch re-plans at the shrunk shard degree (the
+        degree ladder descends; precision is untouched because every
+        surviving device still plans under the FULL per-device budget).
+        Returns the affected tenant names."""
+        affected = self.arbiter.on_device_loss(device)
+        self.mesh = self.arbiter.mesh
+        for name in affected:
+            self.tenants[name].telemetry.degradations += 1
+        return affected
+
+    def on_budget_shrink(self, fraction: float) -> None:
+        """Mid-serving budget shock: the device budget scales to
+        ``fraction`` of itself (every tenant's slice shrinks with it at
+        its next batch — the precision ladder absorbs what the smaller
+        envelope cannot fit)."""
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError("fraction must be in (0, 1]")
+        self.budget = self.budget.scaled(fraction)
+        self.arbiter.budget = self.budget
+        log_event("budget.shrunk", fraction=fraction)
+
+    def prewarm_spares(self, losses: int = 1) -> int:
+        """Pre-plan every tenant's graphs against the post-loss device
+        grants (``BudgetArbiter.degraded_grants``), so a real device
+        loss re-plans **zero graphs cold** — the spare plans already sit
+        in the cache under the exact keys the degraded mesh will ask
+        for.  Mesh mode only.  Returns the number of spare plans
+        warmed (cache hits included: warm is warm)."""
+        if self.mesh is None:
+            raise ValueError("prewarm_spares() is mesh-mode only")
+        grants = self.arbiter.degraded_grants(losses)
+        survivors = self.mesh.devices - int(losses)
+        # the post-loss split() may also re-settle by plain largest
+        # remainder (no ladder snap) — warm those grants too
+        resettle = self.arbiter._device_grants(
+            self.arbiter._granted, devices=survivors)
+        warmed = 0
+        for name, tenant in self.tenants.items():
+            degrees = {grants.get(name, 0), resettle.get(name, 0)} - {0}
+            for n_dev in degrees:
+                spare_mesh = dataclasses.replace(self.arbiter.mesh,
+                                                 devices=n_dev)
+                for b in range(1, self.max_batch + 1):
+                    specs = self._specs(
+                        tenant.params, (b,) + tenant.input_shape,
+                        "float32", tenant.pool_window, tenant.activation,
+                        tenant.ladder)
+                    plan_network(specs, self.budget, fuse=self.fuse,
+                                 calibration=self.calibration,
+                                 mesh=spare_mesh if n_dev > 1 else None)
+                    warmed += 1
+        log_event("mesh.spares_prewarmed", losses=losses, plans=warmed)
+        return warmed
 
     # -- observability ------------------------------------------------------
     def shares(self) -> Dict[str, TenantShare]:

@@ -66,6 +66,14 @@ class TenantTelemetry:
     preemptions: int = 0        # priority dispatches past a queued bucket
     wall_latencies: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    # Fault-survival accounting (runtime/guards.py, runtime/faults.py):
+    # requests the guard failed outright vs shed as deadline-hopeless,
+    # retries spent absorbing transient faults, and how often this
+    # tenant's device grant shrank through the degraded-mesh path.
+    guard_rejected: int = 0
+    guard_shed: int = 0
+    guard_retries: int = 0
+    degradations: int = 0
 
     def record_batch(self, batch_size: int, latencies: List[float],
                      plan, *, cache_hits: int, cache_misses: int,
@@ -168,6 +176,11 @@ class TenantTelemetry:
             "preemptions": self.preemptions,
             "wall_p50_s": self.wall_percentile(50),
             "wall_p95_s": self.wall_percentile(95),
+            # fault-survival columns (zero in a fault-free life)
+            "guard_rejected": self.guard_rejected,
+            "guard_shed": self.guard_shed,
+            "guard_retries": self.guard_retries,
+            "degradations": self.degradations,
             "replans": self.replans,
             "plan_cache_hits": self.plan_cache_hits,
             "plan_cache_misses": self.plan_cache_misses,

@@ -5,9 +5,10 @@ import time
 
 import pytest
 
+from repro.core.shard import degree_ladder
 from repro.obs import EVENTS
 from repro.runtime.fault_tolerance import (StragglerMonitor, Watchdog,
-                                           choose_mesh_shape)
+                                           choose_mesh_shape, elastic_remesh)
 
 
 def test_watchdog_fires_on_missed_beats():
@@ -148,7 +149,61 @@ def test_straggler_rearm_validation():
         StragglerMonitor(rearm=-1)
 
 
+def test_watchdog_rearm_clears_the_latch_and_fires_again():
+    """Regression: ``fired`` latches after the first timeout, so without
+    ``rearm()`` a recovered deployment could never tell a SECOND hang
+    from the stale flag."""
+    fired = []
+    wd = Watchdog(timeout_s=0.05, on_timeout=lambda: fired.append(1)).start()
+    deadline = time.monotonic() + 2.0
+    while not fired and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert fired and wd.fired
+    wd.rearm()
+    assert not wd.fired                  # latch cleared...
+    assert wd._thread.is_alive()         # ...without touching the thread
+    n = len(fired)
+    deadline = time.monotonic() + 2.0
+    while len(fired) <= n and time.monotonic() < deadline:
+        time.sleep(0.01)
+    wd.stop()
+    assert len(fired) > n and wd.fired   # a second silence fires again
+
+
+def test_watchdog_rearm_restarts_the_beat_window():
+    """rearm() must also reset the beat clock: re-arming an idle
+    watchdog whose last beat is ancient must not fire instantly."""
+    fired = []
+    wd = Watchdog(timeout_s=0.2, on_timeout=lambda: fired.append(1))
+    wd._last_beat = time.monotonic() - 10.0   # stale beat from a past life
+    wd.rearm()
+    wd.start()
+    time.sleep(0.05)                     # well inside the fresh window
+    wd.stop()
+    assert not fired
+
+
 def test_choose_mesh_shape_prefers_model_divisors():
     assert choose_mesh_shape(16, prefer_model=16) == (1, 16)
     assert choose_mesh_shape(12, prefer_model=16) == (3, 4)
     assert choose_mesh_shape(3, prefer_model=16) == (3, 1)
+
+
+def test_choose_mesh_shape_walks_the_degree_ladder():
+    """The model-degree candidates are exactly the degree ladder of the
+    pre-loss mesh, so a surviving model degree always divides it."""
+    for n_dev in range(1, 20):
+        data, model = choose_mesh_shape(n_dev, prefer_model=16)
+        assert model in degree_ladder(16)
+        assert data * model <= n_dev
+
+
+def test_elastic_remesh_axis_mode_builds_a_1d_serving_mesh():
+    mesh = elastic_remesh(1, axis="batch", offset=0)
+    assert mesh.axis_names == ("batch",)
+    assert mesh.devices.shape == (1,)
+
+
+def test_elastic_remesh_axis_mode_refuses_short_pools():
+    with pytest.raises(ValueError, match="device_count"):
+        elastic_remesh(64, axis="batch")

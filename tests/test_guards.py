@@ -1,0 +1,326 @@
+"""Execution guards: backoff-schedule properties (deadline-bounded,
+monotone, seed-deterministic — property-based), every ``execute_guarded``
+outcome path, and guarded serving through ``AdaptiveServer``."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.resources import ResourceBudget
+from repro.models.frontends import init_cnn_frontend
+from repro.obs import EVENTS
+from repro.runtime import AdaptiveServer
+from repro.runtime.faults import INJECTOR, DeviceLost, FaultSpec, InjectedFault
+from repro.runtime.guards import (MAX_DEVICE_RETRIES, GuardPolicy,
+                                  GuardViolation, backoff_schedule,
+                                  execute_guarded, screen_finite)
+
+DEVICE = ResourceBudget(vpu_ops_budget=15_000_000)
+
+POLICY_STRATEGY = dict(
+    max_retries=st.integers(min_value=0, max_value=8),
+    base=st.floats(min_value=1e-4, max_value=0.1),
+    factor=st.floats(min_value=1.0, max_value=4.0),
+    jitter=st.floats(min_value=0.0, max_value=1.0),
+    remaining=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+
+
+def _policy(max_retries, base, factor, jitter):
+    return GuardPolicy(max_retries=max_retries, backoff_base_s=base,
+                       backoff_factor=factor, backoff_jitter=jitter)
+
+
+# --------------------------------------------------------------------------
+# backoff_schedule: the three properties the retry loop relies on
+# --------------------------------------------------------------------------
+@settings(max_examples=50)
+@given(**POLICY_STRATEGY)
+def test_backoff_total_never_exceeds_deadline(max_retries, base, factor,
+                                              jitter, remaining, seed):
+    delays = backoff_schedule(_policy(max_retries, base, factor, jitter),
+                              remaining, seed=seed)
+    assert len(delays) <= max_retries
+    assert sum(delays) <= remaining + 1e-12
+
+
+@settings(max_examples=50)
+@given(**POLICY_STRATEGY)
+def test_backoff_is_monotone_nondecreasing(max_retries, base, factor,
+                                           jitter, remaining, seed):
+    delays = backoff_schedule(_policy(max_retries, base, factor, jitter),
+                              remaining, seed=seed)
+    assert all(b >= a for a, b in zip(delays, delays[1:]))
+    assert all(d >= 0.0 for d in delays)
+
+
+@settings(max_examples=50)
+@given(**POLICY_STRATEGY)
+def test_backoff_is_deterministic_under_seed(max_retries, base, factor,
+                                             jitter, remaining, seed):
+    p = _policy(max_retries, base, factor, jitter)
+    assert (backoff_schedule(p, remaining, seed=seed)
+            == backoff_schedule(p, remaining, seed=seed))
+
+
+def test_backoff_unbounded_without_deadline():
+    p = GuardPolicy(max_retries=3, backoff_base_s=1.0, backoff_factor=2.0)
+    assert backoff_schedule(p, None) == [1.0, 2.0, 4.0]
+    # and the truncation really is at the first overdrawing delay
+    assert backoff_schedule(p, 3.5) == [1.0, 2.0]
+
+
+# --------------------------------------------------------------------------
+# Policy validation + screening
+# --------------------------------------------------------------------------
+def test_policy_validation():
+    with pytest.raises(ValueError, match="on_nonfinite"):
+        GuardPolicy(on_nonfinite="panic")
+    with pytest.raises(ValueError, match="max_retries"):
+        GuardPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_factor"):
+        GuardPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError, match="backoff_jitter"):
+        GuardPolicy(backoff_jitter=2.0)
+
+
+def test_screen_finite():
+    assert screen_finite(np.ones((2, 2)))
+    assert not screen_finite(np.array([1.0, float("nan")]))
+    assert not screen_finite(np.array([1.0, float("inf")]))
+
+
+# --------------------------------------------------------------------------
+# execute_guarded: one test per terminal path (fake clock + sleep)
+# --------------------------------------------------------------------------
+class _Clock:
+    """Deterministic wall/sleep pair: sleep() advances wall()."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.slept = []
+
+    def wall(self):
+        return self.t
+
+    def sleep(self, d):
+        self.slept.append(d)
+        self.t += d
+
+
+def _run(attempt, policy, **kw):
+    clk = _Clock()
+    y, report = execute_guarded(attempt, policy, wall=clk.wall,
+                                sleep=clk.sleep, **kw)
+    return y, report, clk
+
+
+def test_clean_attempt_passes_through():
+    y, report, clk = _run(lambda retry_f32=False: np.ones(2), GuardPolicy())
+    assert report.outcome == "ok" and report.retries == 0
+    assert clk.slept == [] and y is not None
+
+
+def test_transient_fault_retries_and_recovers():
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(retry_f32)
+        if len(calls) == 1:
+            raise InjectedFault("boom")
+        return np.ones(2)
+
+    y, report, clk = _run(attempt, GuardPolicy(max_retries=2,
+                                               backoff_base_s=0.01))
+    assert y is not None and report.outcome == "ok"
+    assert report.retries == 1 and not report.retried_f32
+    assert clk.slept == [0.01]          # the retry paid its backoff delay
+    assert calls == [False, False]      # ladder untouched for plain faults
+
+
+def test_nonfinite_reject_fails_immediately():
+    EVENTS.clear()
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(retry_f32)
+        return np.array([float("nan")])
+
+    y, report, _ = _run(attempt, GuardPolicy(on_nonfinite="reject",
+                                             max_retries=4), tenant="a")
+    assert y is None and report.outcome == "rejected"
+    assert report.retries == 0 and len(calls) == 1
+    evs = EVENTS.recent(kind="guard.rejected")
+    assert evs and evs[-1]["tenant"] == "a"
+
+
+def test_nonfinite_retry_f32_flips_the_ladder_off():
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(retry_f32)
+        return np.ones(2) if retry_f32 else np.array([float("nan")])
+
+    y, report, _ = _run(attempt, GuardPolicy(on_nonfinite="retry_f32",
+                                             backoff_base_s=0.001))
+    assert y is not None and report.outcome == "ok"
+    assert report.retried_f32 and calls == [False, True]
+
+
+def test_screening_off_lets_nonfinite_through():
+    y, report, _ = _run(lambda retry_f32=False: np.array([float("nan")]),
+                        GuardPolicy(screen_outputs=False))
+    assert y is not None and report.outcome == "ok"
+
+
+def test_retry_budget_exhausted_is_rejected():
+    def attempt(retry_f32=False):
+        raise InjectedFault("always")
+
+    y, report, clk = _run(attempt, GuardPolicy(max_retries=2,
+                                               backoff_base_s=0.01))
+    assert y is None and report.outcome == "rejected"
+    assert report.retries == 2 and len(clk.slept) == 2
+    assert "retries exhausted" in report.reason
+
+
+def test_hopeless_deadline_is_shed_not_retried():
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(1)
+        raise InjectedFault("always")
+
+    # remaining 0: the whole schedule truncates away — one attempt, shed
+    y, report, clk = _run(attempt, GuardPolicy(max_retries=3,
+                                               backoff_base_s=0.01),
+                          remaining_s=0.0)
+    assert y is None and report.outcome == "shed"
+    assert len(calls) == 1 and clk.slept == []
+
+
+def test_deadline_passing_mid_retry_sheds():
+    """The live deadline check: the schedule fit at entry, but wall time
+    spent in failing attempts eats it before the next retry."""
+    clk = _Clock()
+
+    def attempt(retry_f32=False):
+        clk.t += 0.4                     # each attempt burns real time
+        raise InjectedFault("slow failure")
+
+    y, report = execute_guarded(
+        attempt, GuardPolicy(max_retries=3, backoff_base_s=0.1,
+                             backoff_factor=1.0),
+        remaining_s=0.6, wall=clk.wall, sleep=clk.sleep)
+    assert y is None and report.outcome == "shed"
+    assert "hopeless" in report.reason
+    assert report.retries == 1           # one retry fit, the second did not
+
+
+def test_device_loss_degrades_and_retries_free():
+    lost = []
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(1)
+        if len(calls) == 1:
+            raise DeviceLost("corpse", device=3)
+        return np.ones(2)
+
+    y, report, clk = _run(attempt, GuardPolicy(max_retries=0),
+                          on_device_loss=lambda e: lost.append(e.device))
+    assert y is not None and report.outcome == "ok"
+    assert lost == [3]
+    assert report.retries == 1 and clk.slept == []   # structural: no backoff
+
+
+def test_device_loss_without_hook_is_rejected():
+    def attempt(retry_f32=False):
+        raise DeviceLost("corpse", device=0)
+
+    y, report, _ = _run(attempt, GuardPolicy())
+    assert y is None and report.outcome == "rejected"
+
+
+def test_device_loss_retries_are_bounded():
+    calls = []
+
+    def attempt(retry_f32=False):
+        calls.append(1)
+        raise DeviceLost("unkillable corpse", device=0)
+
+    y, report, _ = _run(attempt, GuardPolicy(max_retries=8),
+                        on_device_loss=lambda e: None)
+    assert y is None and report.outcome == "rejected"
+    assert len(calls) == MAX_DEVICE_RETRIES + 1
+
+
+def test_failing_degradation_rejects():
+    def attempt(retry_f32=False):
+        raise DeviceLost("corpse", device=0)
+
+    def bad_hook(e):
+        raise ValueError("cannot shrink past the last tenant")
+
+    y, report, _ = _run(attempt, GuardPolicy(), on_device_loss=bad_hook)
+    assert y is None and report.outcome == "rejected"
+    assert "degradation failed" in report.reason
+
+
+# --------------------------------------------------------------------------
+# Guarded serving through AdaptiveServer
+# --------------------------------------------------------------------------
+def _guarded_server(policy):
+    srv = AdaptiveServer(DEVICE, max_batch=2)
+    srv.register("a", init_cnn_frontend(jax.random.PRNGKey(0),
+                                        channels=(6, 12), d_model=16),
+                 (12, 12, 6))
+    srv.set_guard("a", policy)
+    return srv
+
+
+def test_set_guard_validates_and_clears():
+    srv = _guarded_server(GuardPolicy())
+    assert srv.guard_for("a") is not None
+    srv.set_guard("a", None)
+    assert srv.guard_for("a") is None
+    with pytest.raises(KeyError):
+        srv.set_guard("ghost", GuardPolicy())
+
+
+def test_poisoned_batch_is_rejected_not_served():
+    srv = _guarded_server(GuardPolicy(on_nonfinite="reject"))
+    rng = np.random.default_rng(0)
+    with INJECTOR.armed([FaultSpec("nan_output", step=0)]):
+        for _ in range(2):
+            srv.submit("a", rng.normal(size=(12, 12, 6)).astype(np.float32))
+        comps = srv.drain()
+    assert len(comps) == 2
+    assert all(not c.ok and c.result is None for c in comps)
+    tel = srv.telemetry()["a"]
+    assert tel["guard_rejected"] == 2 and tel["requests"] == 0
+    assert srv.tenants["a"].lane_free == 0.0     # rejected work bills no lane
+
+
+def test_transient_kernel_fault_is_absorbed_by_retry():
+    srv = _guarded_server(GuardPolicy(max_retries=2, backoff_base_s=0.001))
+    rng = np.random.default_rng(0)
+    with INJECTOR.armed([FaultSpec("kernel_exception", step=0)]):
+        for _ in range(2):
+            srv.submit("a", rng.normal(size=(12, 12, 6)).astype(np.float32))
+        comps = srv.drain()
+    assert len(comps) == 2 and all(c.ok for c in comps)
+    tel = srv.telemetry()["a"]
+    assert tel["guard_retries"] == 1 and tel["guard_rejected"] == 0
+
+
+def test_unguarded_tenant_lets_faults_propagate():
+    srv = _guarded_server(GuardPolicy())
+    srv.set_guard("a", None)             # back to bare execution
+    rng = np.random.default_rng(0)
+    with INJECTOR.armed([FaultSpec("kernel_exception", step=0)]):
+        srv.submit("a", rng.normal(size=(12, 12, 6)).astype(np.float32))
+        with pytest.raises(InjectedFault):
+            srv.step()

@@ -161,6 +161,96 @@ def test_recovery_manager_snapshot_kill_recover(tmp_path):
     assert cold_replans_since(before) == 0
 
 
+def test_recover_rearms_the_watchdog_for_a_second_death(tmp_path):
+    """Regression: the fire-once pattern (on_death stops the watchdog)
+    left recovery deaf — after one recover() a SECOND worker death never
+    fired.  recover() must re-arm: clear the latch on a live monitor or
+    replace a joined one."""
+    srv, sched = _deployment()
+    died = []
+    holder = {}
+
+    def on_death():
+        died.append(1)
+        holder["mgr"].watchdog.stop()    # fire-once: the thread joins
+
+    mgr = RecoveryManager(srv, tmp_path, scheduler=sched,
+                          heartbeat_timeout_s=0.05, on_death=on_death)
+    holder["mgr"] = mgr
+    try:
+        mgr.snapshot()
+        deadline = time.monotonic() + 2.0
+        while not died and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert died == [1]
+        assert not mgr.watchdog._thread.is_alive()   # monitor is gone
+
+        mgr.recover()                    # adopt replacement + re-arm
+        assert mgr.watchdog._thread.is_alive()
+        assert not mgr.watchdog.fired
+        assert mgr.scheduler is not None
+        assert mgr.scheduler.recovery is mgr   # beats reach the new dog
+
+        deadline = time.monotonic() + 2.0
+        while len(died) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert len(died) == 2            # the second death fired too
+    finally:
+        mgr.stop()
+
+
+def test_degrade_rearms_the_watchdog(tmp_path):
+    """The heartbeat path's lighter alternative: degrade() shrinks the
+    mesh in place and re-arms, so a second silence still fires."""
+    from repro.core.resources import MeshSpec
+
+    srv = AdaptiveServer(DEVICE, max_batch=2, mesh=MeshSpec(devices=2))
+    srv.register("a", _frontend(0), (12, 12, 6))
+    srv.arbiter.observe("a", 100.0)
+    srv._apply_shares(srv.arbiter.split())
+    died = []
+    holder = {}
+
+    def on_death():
+        died.append(1)
+        holder["mgr"].watchdog.stop()
+
+    mgr = RecoveryManager(srv, tmp_path, heartbeat_timeout_s=0.05,
+                          on_death=on_death)
+    holder["mgr"] = mgr
+    try:
+        deadline = time.monotonic() + 2.0
+        while not died and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert died == [1]
+        affected = mgr.degrade(1)        # silence treated as device loss
+        assert affected == ["a"]
+        assert srv.mesh.devices == 1
+        assert mgr.watchdog._thread.is_alive()
+        deadline = time.monotonic() + 2.0
+        while len(died) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert len(died) == 2
+    finally:
+        mgr.stop()
+
+
+def test_snapshot_round_trips_guard_policies(tmp_path):
+    """Guard policies are serving state: a recovered server screens the
+    same way the dead one did."""
+    from repro.runtime.guards import GuardPolicy
+
+    srv, sched = _deployment()
+    policy = GuardPolicy(on_nonfinite="retry_f32", max_retries=3,
+                         backoff_base_s=0.002)
+    srv.set_guard("a", policy)
+    snapshot_server(srv, tmp_path, 1, scheduler=sched)
+    simulate_worker_death()
+    srv2, _ = recover_server(tmp_path)
+    assert srv2.guard_for("a") == policy
+    assert srv2.guard_for("b") is None
+
+
 def test_recovery_manager_watchdog_detects_silence(tmp_path):
     EVENTS.clear()
     srv, sched = _deployment()
